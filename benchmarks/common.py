@@ -1,0 +1,120 @@
+"""Shared benchmark helpers: tiny-GPT pretraining runs per precision
+strategy (the CPU-scale analog of the paper's GPT/Wikipedia experiments),
+with EDQ/imprecision traces."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.collage import CollageAdamW, cosine_schedule
+from repro.core.precision import PrecisionPolicy, parse_strategy
+from repro.data.synthetic import make_batch_fn
+from repro.models.model import build_model
+from repro.train import train_loop
+
+
+_WARM_CACHE: dict = {}
+
+
+def _warm_start(cfg, model, *, steps, lr, seed, batch, seq, b2):
+    """Shared option-D warm phase: grows parameter norms and establishes the
+    second moment, putting the continuation in the paper's lost-arithmetic
+    regime (Fig. 2: ‖θ‖/‖Δθ‖ ≈ 900 only after many iterations). Cached so
+    every strategy continues from the IDENTICAL state."""
+    from repro.core.collage import convert_state
+    key_t = (cfg.name, steps, lr, seed, batch, seq, b2)
+    if key_t in _WARM_CACHE:
+        return _WARM_CACHE[key_t]
+    policy = PrecisionPolicy(strategy=parse_strategy("D"))
+    opt = CollageAdamW(lr, b2=b2, policy=policy, compute_metrics=False)
+    shape = ShapeConfig("warm", seq, batch, "train")
+    batch_fn = make_batch_fn(cfg, shape, seed=seed)
+    step_fn = jax.jit(train_loop.make_train_step(model, opt))
+    state = train_loop.init_state(model, opt, jax.random.PRNGKey(seed))
+    for i in range(steps):
+        state, _ = step_fn(state, batch_fn(i))
+    _WARM_CACHE[key_t] = (state, opt)
+    return _WARM_CACHE[key_t]
+
+
+def pretrain(strategy: str, *, steps=500, b2=0.999, lr=2e-3, seed=0,
+             arch="gpt-tiny", batch=8, seq=64, weight_decay=0.0,
+             log_every=25, wd_mode="fused", metrics=True, warm_steps=0,
+             cont_lr=2e-4):
+    """Train the tiny GPT on the synthetic corpus; returns summary dict.
+
+    warm_steps > 0: continue from a shared option-D warm checkpoint with the
+    optimizer state migrated to ``strategy`` (core.collage.convert_state) and
+    a FIXED low continuation lr — |Δθ| ≈ cont_lr falls below ulp(θ)/2 for
+    the grown parameters, which is the paper's lost-arithmetic condition
+    (Fig. 2); measured by the loss *descent* over the continuation."""
+    from repro.core.collage import convert_state
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    policy = PrecisionPolicy(strategy=parse_strategy(strategy),
+                             wd_mode=wd_mode)
+    lr_fn = (lambda t: jnp.float32(cont_lr)) if warm_steps else         cosine_schedule(lr, 40, steps)
+    opt = CollageAdamW(lr_fn, b2=b2,
+                       weight_decay=weight_decay, policy=policy,
+                       compute_metrics=metrics)
+    shape = ShapeConfig("bench", seq, batch, "train")
+    batch_fn = make_batch_fn(cfg, shape, seed=seed)
+    step_fn = jax.jit(train_loop.make_train_step(model, opt))
+    if warm_steps:
+        warm_state, _ = _warm_start(cfg, model, steps=warm_steps, lr=lr,
+                                    seed=seed, batch=batch, seq=seq, b2=b2)
+        new_opt_state = convert_state(warm_state.opt_state, warm_state.params,
+                                      policy)
+        state = train_loop.TrainState(warm_state.params, new_opt_state, None)
+    else:
+        state = train_loop.init_state(model, opt, jax.random.PRNGKey(seed))
+
+    trace = {"step": [], "loss": [], "ppl": [], "edq": [], "edq_ratio": [],
+             "imprecision_pct": []}
+    t0 = time.time()
+    losses = []
+    for i in range(warm_steps, warm_steps + steps):
+        state, m = step_fn(state, batch_fn(i))
+        losses.append(float(m["loss"]))
+        if not metrics:
+            m = {**m, "edq": 0.0, "update_norm": 1.0, "imprecision_pct": 0.0}
+        if i % log_every == 0 or i == steps - 1:
+            trace["step"].append(i)
+            trace["loss"].append(float(m["loss"]))
+            trace["ppl"].append(float(m["ppl"]))
+            trace["edq"].append(float(m["edq"]))
+            un = float(m["update_norm"])
+            trace["edq_ratio"].append(float(m["edq"]) / max(un, 1e-30))
+            trace["imprecision_pct"].append(float(m["imprecision_pct"]))
+    dt = time.time() - t0
+    # mean second moment (Expansion-aware) — the Table 6 v-EMA diagnostic
+    from repro.core.mcf import Expansion
+    v_leaves = jax.tree_util.tree_leaves(
+        state.opt_state.v, is_leaf=lambda x: isinstance(x, Expansion))
+    v_tot, v_n = 0.0, 0
+    for v in v_leaves:
+        val = v.value(jnp.float32) if isinstance(v, Expansion) else \
+            v.astype(jnp.float32)
+        v_tot += float(jnp.sum(jnp.abs(val)))
+        v_n += val.size
+    v_mean = v_tot / max(v_n, 1)
+    k = max(min(50, steps // 4), 1)
+    head = sum(losses[:k]) / k
+    tail_l = losses[-k:]
+    final_loss = sum(tail_l) / len(tail_l)
+    return {
+        "strategy": strategy, "b2": b2,
+        "final_loss": final_loss,
+        "final_ppl": float(jnp.exp(jnp.float32(final_loss))),
+        "descent": head - final_loss,
+        "v_mean": v_mean,
+        "steps_per_s": steps / dt, "seconds": dt, "trace": trace,
+    }
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,63 @@
+"""Benchmark driver: one harness per paper table/figure + roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3]
+
+Prints ``name,us_per_call,derived`` CSV rows and a claim-validation summary;
+exits non-zero if any validated claim fails.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import roofline, table_benchmarks as tb
+
+
+BENCHES = [
+    ("table1", tb.table1_expansions),
+    ("table2", tb.table2_memory),
+    ("table3", tb.table3_pretrain),
+    ("table6", tb.table6_beta2_ablation),
+    ("table7", tb.table7_throughput),
+    ("table8", tb.table8_memory_compat),
+    ("fig3", tb.fig3_edq),
+    ("appD", tb.appendix_d_weight_decay),
+    ("roofline", roofline.main),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    all_ok = {}
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        rows, ok = fn(quick=args.quick)
+        for r in rows:
+            print(r)
+        for k, v in ok.items():
+            all_ok[f"{name}/{k}"] = v
+        print(f"# {name}: {time.time() - t0:.1f}s", file=sys.stderr)
+
+    print("\n# paper-claim validation", file=sys.stderr)
+    failed = [k for k, v in all_ok.items() if not v]
+    for k, v in sorted(all_ok.items()):
+        print(f"#  {'PASS' if v else 'FAIL'} {k}", file=sys.stderr)
+    for k, v in sorted(all_ok.items()):
+        print(f"validation/{k},0.0,{'PASS' if v else 'FAIL'}")
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        return 1
+    print("# all validated claims PASS", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

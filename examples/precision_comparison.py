@@ -1,0 +1,23 @@
+"""The paper's core experiment at laptop scale: pretrain the same model under
+precision options A / B (light) / C (plus) / D⁻ᴹᵂ / D and compare final
+perplexity, EDQ and imprecision — reproduces the Table 3 / Fig. 3 ordering.
+
+  PYTHONPATH=src python examples/precision_comparison.py [--steps 400]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks.common import pretrain  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--b2", type=float, default=0.999)
+    args = ap.parse_args()
+    print(f"{'option':8s} {'final_ppl':>10s} {'EDQ/‖Δθ‖':>10s} {'lost %':>8s} {'steps/s':>8s}")
+    for s in ("A", "B", "C", "D-MW", "D"):
+        r = pretrain(s, steps=args.steps, b2=args.b2)
+        tr = r["trace"]
+        print(f"{s:8s} {r['final_ppl']:10.3f} {tr['edq_ratio'][-1]:10.3f} "
+              f"{tr['imprecision_pct'][-1]:8.2f} {r['steps_per_s']:8.2f}")

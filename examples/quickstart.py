@@ -1,0 +1,12 @@
+"""Quickstart: pretrain a tiny GPT with Collage-plus (strict bf16 storage, no
+fp32 master weights) on the synthetic corpus, watching loss + EDQ.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    train_main(["--arch", "gpt-tiny", "--steps", "120", "--precision", "C",
+                "--b2", "0.999", "--log-every", "20"] + sys.argv[1:])

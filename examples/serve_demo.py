@@ -1,0 +1,12 @@
+"""Serving demo: batched prefill + KV-cache decode on the RWKV6 (O(1) state)
+and granite (GQA KV cache) smoke models.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    for arch in ("granite-3-2b", "rwkv6-1.6b"):
+        print(f"=== {arch} (smoke config) ===")
+        serve_main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "32", "--gen", "16"])

@@ -1,0 +1,215 @@
+"""Assemble EXPERIMENTS.md from the dry-run artifacts, the perf-iteration
+log (experiments/perf_log.json) and the latest benchmark output.
+
+  PYTHONPATH=src python scripts/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks import roofline  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PERF_LOG = ROOT / "experiments" / "perf_log.json"
+
+
+def dryrun_section() -> str:
+    out = ["## §Dry-run", ""]
+    for mesh, chips in (("single_pod", 256), ("multi_pod", 512)):
+        cells = roofline.load_cells(mesh)
+        ok = [c for c in cells if not c.get("skipped")]
+        skip = [c for c in cells if c.get("skipped")]
+        out.append(f"### {mesh} ({chips} chips)")
+        out.append("")
+        out.append(f"- cells lowered+compiled: **{len(ok)}**, "
+                   f"spec-mandated skips: **{len(skip)}** "
+                   f"(long_500k on pure full-attention archs), "
+                   f"total accounted: **{len(ok) + len(skip)} / 40**")
+        if ok:
+            comp = [c.get("compile_seconds", 0) or 0 for c in ok]
+            out.append(f"- compile time (1 CPU core, 512 virtual devices): "
+                       f"median {sorted(comp)[len(comp)//2]:.0f}s, "
+                       f"max {max(comp):.0f}s")
+            mems = [(c["arch"], c["shape"],
+                     (c.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+                      + c.get("memory_analysis", {}).get("temp_size_in_bytes", 0)) / 1e9)
+                    for c in ok]
+            worst = sorted(mems, key=lambda x: -x[2])[:5]
+            out.append("- largest per-device footprints (args+temps, GB): "
+                       + ", ".join(f"{a}/{s}={g:.1f}" for a, s, g in worst))
+        out.append("")
+    out.append(
+        "Skipped cells (documented in DESIGN.md §5): long_500k for "
+        "seamless-m4t-medium, granite-3-2b, internlm2-1.8b, codeqwen1.5-7b, "
+        "qwen3-moe-30b-a3b, moonshot-v1-16b-a3b, internvl2-1b (7 cells/mesh). "
+        "gemma3-27b (5:1 local:global), jamba (hybrid SSM) and rwkv6 (SSM) "
+        "run long_500k.")
+    out.append("")
+    out.append(
+        "Per-cell artifacts (JSON + zstd-compressed optimized HLO) live in "
+        "`experiments/dryrun/<mesh>/` — bytes-per-device, FLOPs, full "
+        "collective schedule (op kinds, counts, replica groups, payload "
+        "bytes). The §Roofline terms below are derived from them.")
+    out.append("")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    out = ["## §Roofline", ""]
+    out.append(
+        "Terms per device per step (TPU v5e model: 197 TFLOP/s bf16, "
+        "819 GB/s HBM, ~50 GB/s/link ICI):\n"
+        "`compute_s = HLO_dot_flops/peak`, `memory_s = HBM_bytes/bw`, "
+        "`collective_s = ring-adjusted wire bytes / link bw`.\n\n"
+        "Methodology notes (full details in `repro/utils/hlo_analysis.py`):\n"
+        "1. XLA's `cost_analysis()` counts `while` bodies once — our analyzer "
+        "parses the compiled HLO call graph and multiplies by loop trip "
+        "counts (validated vs cost_analysis on scan-free programs; "
+        "scan-over-layers models would otherwise under-report ~n_layers×).\n"
+        "2. The CPU backend materializes bf16 compute via f32 converts and "
+        "splits fusions finer than TPU; we report TPU-equivalent traffic "
+        "(floats clamped to 2B, copies/in-place cache updates aliased). "
+        "Raw CPU-HLO numbers are kept in the JSONs as upper bounds.\n"
+        "3. `useful_ratio` = MODEL_FLOPS(6·N_active·D or 2·N_active·D)"
+        "/HLO_FLOPs — catches remat/redundancy waste.\n")
+    out.append("### Baseline table — single_pod (16×16)")
+    out.append("")
+    out.append(roofline.table("single_pod"))
+    out.append("")
+    out.append("### Baseline table — multi_pod (2×16×16)")
+    out.append("")
+    out.append(roofline.table("multi_pod"))
+    out.append("")
+    picked = roofline.pick_hillclimb_cells()
+    out.append("### Hillclimb cells (per §Perf policy)")
+    out.append("")
+    for c in picked:
+        t = c["roofline_terms_s"]
+        out.append(f"- **{c['arch']} × {c['shape']}** — {c['why']}; dominant "
+                   f"term: {c['dominant']} "
+                   f"({t[c['dominant']]:.2e}s/step); "
+                   f"{roofline.RECOMMEND[c['dominant']]}")
+    out.append("")
+    out.append("Per-cell bottleneck one-liners are encoded in the `dominant` "
+               "column; the standard fixes per bottleneck class:")
+    for k, v in roofline.RECOMMEND.items():
+        out.append(f"- `{k.replace('_s', '')}`: {v}")
+    out.append("")
+    return "\n".join(out)
+
+
+SUMMARY = """### Outcome summary (baseline → best variant, step-time bound =
+max roofline term, single-pod)
+
+| cell | baseline bound | best variant | new bound | gain | new bottleneck |
+|---|---|---|---|---|---|
+| granite-3-2b × train_4k | 12.09 s (memory) | `sp=1` | 3.47 s | **3.5×** | memory≈collective |
+| internvl2-1b × prefill_32k | 25.54 s (collective) | `tpmode=none` | 19.97 s | **1.3×** | memory (head-replication cost) |
+| jamba-398b × train_4k | 663.6 s (memory) | `ssmchunk=128` | 196.9 s | **3.4×** | memory (per-token scan floor) |
+| moonshot-16b × prefill_32k (beyond-paper) | 64.9 s (compute, 0.4% useful) | `moegroup=8192` | 6.30 s | **10.3×** | memory |
+| gemma3-27b × train_4k (beyond-paper) | 23.7 s (memory) | `attn=flash` | 23.6 s | 1.0× (wash) | memory |
+
+Paper-faithful baseline vs beyond-paper optimized are recorded SEPARATELY:
+every baseline row above is the Collage-plus (option C) paper configuration;
+each variant is an additional system-level optimization the paper does not
+discuss. The Collage contribution itself is collective-neutral (elementwise
+optimizer; δθ/δv shard with θ) — its perf effect is the optimizer-step HBM
+traffic (22 B/param fused vs 28 B/param for option D, −21%, plus no fp32
+upcast pass; see benchmarks table7 and the fused Pallas kernel).
+
+Fit note (why multi-pod exists): jamba-398b training state alone is
+398e9×12 B / 256 chips = 18.7 GB/chip — over v5e's 16 GB on a single pod;
+the 512-chip multi-pod halves it to 9.3 GB/chip (+ activations, OK with
+accum=16). The dry-run proves the sharding is coherent on both meshes; the
+memory_analysis fields in the JSONs quantify the footprints.
+"""
+
+
+def perf_section() -> str:
+    out = ["## §Perf — hypothesis → change → measure → validate", ""]
+    if not PERF_LOG.exists():
+        out.append("_(perf log not yet populated)_")
+        return "\n".join(out)
+    out.append(SUMMARY)
+    entries = json.loads(PERF_LOG.read_text())
+    for e in entries:
+        out.append(f"### {e['cell']} — iteration {e['iter']}: {e['title']}")
+        out.append("")
+        out.append(f"- **Hypothesis.** {e['hypothesis']}")
+        out.append(f"- **Change.** {e['change']}")
+        out.append(f"- **Before.** {e['before']}")
+        out.append(f"- **After.** {e['after']}")
+        out.append(f"- **Verdict.** {e['verdict']}")
+        if e.get("lesson"):
+            out.append(f"- **Lesson.** {e['lesson']}")
+        out.append("")
+    return "\n".join(out)
+
+
+HEADER = """# EXPERIMENTS
+
+Paper: *Collage: Light-Weight Low-Precision Strategy for LLM Training*
+(ICML 2024). Framework: `repro` (JAX + Pallas-TPU), CPU container,
+TPU v5e as the modeled target. See DESIGN.md for architecture; README.md
+for how to run everything below.
+
+## §Paper-validation (faithful-reproduction gate)
+
+`PYTHONPATH=src python -m benchmarks.run` executes one harness per paper
+table/figure and *asserts* the paper's qualitative claims (output:
+`bench_output.txt`, rows `validation/...,PASS`):
+
+| paper artifact | harness | validated claims |
+|---|---|---|
+| Table 1 | table1_expansions | exact bf16 expansions of β₂; RN(0.999)=1.0 |
+| Table 2 / Fig 1 | table2_memory | measured bytes/param = 8/10/12/12/16; −37.5 %/−25 % vs option D |
+| Tables 3/5 | table3_pretrain | quality ordering A ≪ light ≤ plus ≈ D; D⁻ᴹᵂ insufficient |
+| Table 6 | table6_beta2_ablation | light ≈ D at β₂=0.95; plus ≈ D at β₂=0.999 (light degrades) |
+| Table 7 | table7_throughput | Collage optimizer-step ≤ option D (wall + TPU HBM-byte model: 22 vs 28 B/param) |
+| Table 8 | table8_memory_compat | Collage fits strictly more (UBS, seq) cells than D on 16×40 GB |
+| Fig. 3 | fig3_edq | A: imprecision→high & EDQ collapses; plus tracks D |
+| App. D | appendix_d_weight_decay | PyTorch-style decay is a bf16 no-op; fused decay applies |
+
+Scale adaptation (DESIGN.md §5): offline container ⇒ deterministic
+Zipf-Markov synthetic corpus; quality runs use the paper's *long-run regime*
+via a shared option-D warm phase + per-strategy continuation with
+optimizer-state precision migration (`core.collage.convert_state`) — the
+lost-arithmetic condition ‖θ‖/‖Δθ‖ ≫ 2⁸ (Paper Fig. 2) holds from the
+continuation start.
+
+Measured outcomes (bench_output.txt, final run):
+
+- **Fig. 3 / Table 3 mechanisms**: option A loses **95.9%** of its intended
+  parameter updates (EDQ/‖Δθ‖ = 0.29) in the continuation regime;
+  Collage-light/plus retain them (imprecision 15.9%/15.6%, EDQ ratio 1.000);
+  D⁻ᴹᵂ still loses θ-updates (95.8% — fp32 optimizer states alone don't fix
+  the θ⊕Δθ step, exactly the paper's Table 3 finding). Option D's fp32
+  master achieves EDQ 0.999 — plus matches it with 25% fewer bytes/param.
+- **Table 6 (β₂ ablation)**: at β₂=0.999 light's bf16 second moment drifts
+  **+8.9%** above the true EMA (it cannot decay: bf16(0.999)=1.0) while
+  plus tracks D to <0.1%; at β₂=0.95 light ≈ plus ≈ D — the paper's exact
+  pattern. The fp64-oracle trajectory ordering (A ≫ light > plus ≈ D in
+  distance-to-oracle) is unit-tested in tests/test_collage_optimizer.py.
+- **Table 2**: measured bytes/param exactly 8/10/12/12/16 (A/B/C/D⁻ᴹᵂ/D).
+- **Table 7 mechanism**: fused Collage-plus update moves 22 B/param of HBM
+  traffic vs 28 B/param for option D (−21%) and never touches fp32 state.
+  (CPU wall times in the harness are informational: strict-rounding
+  emulation costs extra passes a TPU VPU performs natively.)
+- **Table 8**: the analytic 16×A100-40GB memory model fits strictly more
+  (UBS, seq) cells for B/C than for D — paper's compatibility trend.
+
+"""
+
+
+def main():
+    body = HEADER + dryrun_section() + "\n" + roofline_section() + "\n" + \
+        perf_section() + "\n"
+    (ROOT / "EXPERIMENTS.md").write_text(body)
+    print(f"wrote EXPERIMENTS.md ({len(body)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""§Perf hillclimb driver: lower each candidate variant of the three chosen
+cells, compare roofline terms vs the baseline JSON, and append
+hypothesis→change→before→after→verdict entries to experiments/perf_log.json.
+
+  PYTHONPATH=src python scripts/run_hillclimb.py [--only cellname]
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+PERF_LOG = ROOT / "experiments" / "perf_log.json"
+DRY = ROOT / "experiments" / "dryrun" / "single_pod"
+
+# (cell, variant, title, hypothesis) — napkin math inline.
+PLAN = [
+    # ---- Cell A: granite-3-2b × train_4k (worst non-degenerate roofline
+    # fraction 0.052; memory-dominant with a large collective term) ----
+    ("granite-3-2b", "train_4k", "attn=flash",
+     "flash attention (train)",
+     "Masked-full attention materializes (rows/dev=4 × 2 heads/dev × 4096² "
+     "× 2B) ≈ 268 MB of score/prob tensors per layer-microstep; over 40 "
+     "layers × 4 accum × ~3 passes ≈ 0.4 TB/dev of pure score traffic plus "
+     "the fusions around them. Online-softmax (flash) keeps scores in "
+     "registers: memory_s should drop by the score-tensor share (~5-15%), "
+     "compute_s unchanged (same dots)."),
+    ("granite-3-2b", "train_4k", "sp=1",
+     "sequence parallelism",
+     "Baseline has 1132 all-reduces (176 GB/dev) from TP row-parallel "
+     "boundaries (f32→bf16-corrected). Sharding the residual stream's "
+     "sequence dim over the model axis converts each boundary all-reduce "
+     "into reduce-scatter(+all-gather at the next matmul): wire bytes per "
+     "boundary halve (2·(n-1)/n·B → 2·(n-1)/n·B/2 roundtrip) ⇒ "
+     "collective_s ≈ ×0.5; norms also run on 1/16 of tokens ⇒ small "
+     "memory win."),
+    ("granite-3-2b", "train_4k", "attn=flash,sp=1",
+     "flash + sequence parallelism",
+     "Independent mechanisms ⇒ both wins should compose."),
+    ("granite-3-2b", "train_4k", "attn=flash,sp=1,accum=2",
+     "bigger microbatch (accum 4→2)",
+     "Per-microstep fixed traffic (FSDP weight all-gathers, layer-stacked "
+     "save/restore) is paid per accumulation step: halving accum halves "
+     "those terms; activation traffic per token is constant. Risk: 2× "
+     "activation footprint (memory_analysis check)."),
+    # ---- Cell B: internvl2-1b × prefill_32k (most collective-bound:
+    # 24 625 all-reduces, 1.45 TB/dev — GSPMD resharding storm because
+    # 14 heads / 2 KV heads don't divide the 16-way model axis) ----
+    ("internvl2-1b", "prefill_32k", "tpmode=mlponly",
+     "replicate attention across TP (MLP-only TP)",
+     "14 Q heads (2 KV heads) don't divide the 16-way model axis: GSPMD "
+     "re-shards Q/K/V per layer ⇒ 24 625 all-reduces (1.45 TB/dev). "
+     "Replicating the (tiny: 896², ~0.8M-param) attention projections and "
+     "keeping TP only on the 896×4864 MLP removes the resharding entirely "
+     "⇒ collective_s should collapse ~10× (d_ff=4864 = 16×304 divides "
+     "cleanly). Cost: attention compute replicated over the model axis — "
+     "acceptable, it is <10% of layer FLOPs at L=32k? No — attention "
+     "scores are O(L²): scores stay batch-sharded; only projections "
+     "replicate. Check compute_s."),
+    ("internvl2-1b", "prefill_32k", "tpmode=none",
+     "pure FSDP (no TP)",
+     "A 0.9B model on 256 chips doesn't need TP at all: with batch 32 over "
+     "dp=16 and weights FSDP-gathered per layer, the model axis only adds "
+     "resharding. Expect collective_s ≈ all-gather-only (weights: 1.8 GB × "
+     "layers/step) and the all-reduce storm gone. Risk: per-device "
+     "activation memory grows (no head sharding) — check memory terms."),
+    # ---- Cell C: jamba-1.5-large-398b × train_4k (paper-representative
+    # largest train cell; memory-dominated: 663 s, fusion traffic 477 TB
+    # from the Mamba chunked-scan materializations) ----
+    ("jamba-1.5-large-398b", "train_4k", "ssmchunk=64",
+     "larger SSM chunk (16→64)",
+     "Per-chunk fixed costs (carry h read/write, chunk re-layout "
+     "transposes, scan bookkeeping) are paid 256×/layer at ck=16 but only "
+     "64×/layer at ck=64; per-token a_bar/b_bar materialization is "
+     "constant. Expect a moderate memory_s drop (fixed-cost share) at 4× "
+     "the per-chunk VMEM footprint ((1,64,1024,16)f32 = 4 MB — still "
+     "fine)."),
+    ("jamba-1.5-large-398b", "train_4k", "remat=dots",
+     "save dot outputs instead of full recompute",
+     "remat=full recomputes the entire forward (incl. the expensive "
+     "associative scans) during backward ⇒ ~2× scan traffic. Saving dot "
+     "outputs skips most recompute: memory_s (traffic) should drop "
+     "~25-35%; footprint (temp bytes) will grow — check memory_analysis "
+     "fits 16 GB."),
+    ("jamba-1.5-large-398b", "train_4k", "ssmchunk=64,accum=8",
+     "chunk 64 + accum 16→8",
+     "Halving accumulation halves per-microstep fixed traffic (weight "
+     "gathers: 398B/16 × 2B × layers-share per step) and scan fixed "
+     "costs; activation footprint doubles (rows/dev 1→2) — borderline, "
+     "check temp bytes."),
+    # ---- Iteration 2 (driven by iteration-1 measurements) ----
+    ("granite-3-2b", "train_4k", "sp=1,accum=2",
+     "SP + bigger microbatch (iter 2 on the SP winner)",
+     "sp=1 cut the dominant memory term 71% (norm/elementwise regions now "
+     "touch 1/16 of tokens). Remaining per-microstep fixed traffic (FSDP "
+     "weight gathers, layer-stack save/restore) halves with accum 4→2; "
+     "activation footprint doubles — expect a further ~10-20% memory_s "
+     "drop if fixed costs are still significant."),
+    ("internvl2-1b", "prefill_32k", "tpmode=none,sp=1",
+     "pure FSDP + sequence sharding over the idle model axis (iter 2)",
+     "tpmode=none removed the all-reduce storm (−99.9%) leaving memory "
+     "dominant. The model axis is now idle: shard the sequence dim of "
+     "activations over it (context parallelism) — elementwise/norm "
+     "regions touch 1/16 of the 32k tokens ⇒ memory_s should drop "
+     "substantially like granite's sp win."),
+    ("jamba-1.5-large-398b", "train_4k", "ssmchunk=128",
+     "even larger SSM chunk (iter 2)",
+     "ck 16→64 cut memory 59.5% (per-chunk fixed costs dominated). "
+     "Doubling again to 128 halves remaining fixed costs; per-chunk "
+     "buffer (1,128,1024,16)f32 = 8 MB — still VMEM-viable. Expect a "
+     "smaller but positive win (diminishing returns)."),
+    # ---- Beyond-baseline extras (recorded as §Perf entries too) ----
+    ("moonshot-v1-16b-a3b", "prefill_32k", "moegroup=8192",
+     "grouped MoE dispatch (beyond-paper)",
+     "Ungrouped GShard dispatch builds (T,E,C) one-hots with T=1M tokens, "
+     "C=T·K/E·1.25≈123k ⇒ dispatch einsum T·E·C·D ≈ 1.6e19 FLOPs — ~1000× "
+     "the useful expert FLOPs (useful_ratio 0.004). Grouping dispatch at "
+     "8192 tokens (C_g≈960) makes it linear: expect compute_s ~60× down "
+     "to ≈ expert-FLOPs level, memory_s similarly (dispatch tensors were "
+     "517 GB/dev)."),
+    ("gemma3-27b", "train_4k", "attn=flash",
+     "banded local + flash global attention (beyond-paper)",
+     "5/6 of layers are 1024-window local but the baseline computes full "
+     "4096² masked scores; banded blocks compute only 2W=2048 keys/query "
+     "(×0.5 FLOPs on local layers ⇒ ×0.58 total attention FLOPs) and "
+     "flash removes global-layer score materialization: both compute_s "
+     "(attention share) and memory_s should drop."),
+]
+
+
+def term_str(rec):
+    t = rec["roofline_terms_s"]
+    return (f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+            f"collective={t['collective_s']:.3e}s dominant={rec['dominant']} "
+            f"useful_ratio={rec['useful_flops_ratio']:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-compile", action="store_true")
+    args = ap.parse_args()
+
+    log = json.loads(PERF_LOG.read_text()) if PERF_LOG.exists() else []
+    done = {(e["cell"], e["variant"]) for e in log}
+    iters = {}
+    for arch, shape, variant, title, hypothesis in PLAN:
+        cell = f"{arch}×{shape}"
+        if args.only and args.only not in cell:
+            continue
+        if (cell, variant) in done:
+            print(f"[skip logged] {cell} {variant}")
+            continue
+        base = json.loads((DRY / f"{arch}__{shape}.json").read_text())
+        suffix = "__" + "".join(ch if (ch.isalnum() or ch in "=.-_")
+                                else "_" for ch in variant)
+        vpath = DRY / f"{arch}__{shape}{suffix}.json"
+        if not vpath.exists() and not args.skip_compile:
+            print(f"[lower] {cell} {variant}")
+            r = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+                 "--shape", shape, "--variant", variant],
+                env={**__import__("os").environ,
+                     "PYTHONPATH": str(ROOT / "src")},
+                cwd=ROOT, capture_output=True, text=True, timeout=1800)
+            if r.returncode != 0:
+                print(r.stdout[-2000:], r.stderr[-2000:])
+                continue
+        if not vpath.exists():
+            print(f"[missing] {vpath}")
+            continue
+        after = json.loads(vpath.read_text())
+        bt = base["roofline_terms_s"]
+        at = after["roofline_terms_s"]
+        dom = base["dominant"]
+        delta = (bt[dom] - at[dom]) / bt[dom] * 100
+        verdict = ("CONFIRMED" if delta > 5 else
+                   ("refuted (regression)" if delta < -5 else
+                    "inconclusive (<5%)"))
+        iters[cell] = iters.get(cell, 0) + 1
+        entry = {
+            "cell": cell, "iter": iters[cell], "variant": variant,
+            "title": title, "hypothesis": hypothesis,
+            "change": f"--variant {variant}",
+            "before": term_str(base), "after": term_str(after),
+            "verdict": f"{verdict}: dominant term ({dom}) changed by "
+                       f"{delta:+.1f}%",
+            "lesson": "",
+        }
+        log.append(entry)
+        PERF_LOG.parent.mkdir(exist_ok=True)
+        PERF_LOG.write_text(json.dumps(log, indent=1))
+        print(f"[logged] {cell} {variant}: {entry['verdict']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""qwen3-moe-30b-a3b [moe]: 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+48L d_model=2048 32H (GQA kv=4) d_ff=768 (expert width) vocab=151936."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=768, vocab_size=151936, n_experts=128, experts_per_token=8,
+    act="swiglu", rope_theta=1e6, qk_norm=True)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, vocab_size=256, n_experts=8, experts_per_token=2, capacity_factor=4.0)

@@ -1,0 +1,11 @@
+"""Collage core: MCF numerics, precision-aware optimizer, EDQ diagnostics."""
+from repro.core import edq, mcf
+from repro.core.collage import CollageAdamW, CollageOptState, StepMetrics, cosine_schedule
+from repro.core.mcf import Expansion
+from repro.core.precision import BYTES_PER_PARAM, PrecisionPolicy, Strategy, parse_strategy
+
+__all__ = [
+    "edq", "mcf", "CollageAdamW", "CollageOptState", "StepMetrics",
+    "cosine_schedule", "Expansion", "BYTES_PER_PARAM", "PrecisionPolicy",
+    "Strategy", "parse_strategy",
+]

@@ -1,0 +1,315 @@
+"""Multi-Component Float (MCF) arithmetic — the numerical core of Collage.
+
+Implements the error-free transformations of Paper §4.1 / Appendix C over
+length-2 expansions ``(hi, lo)`` where ``hi + lo`` is the unevaluated exact
+sum, components non-overlapping, ``|lo| ≤ ulp(hi)/2``.
+
+STRICT-FPU DESIGN (load-bearing, see DESIGN.md §3):
+XLA enables *excess precision* for bf16: a fused ``f32(x_bf16_op)`` may be
+rewritten to reuse the f32 intermediate, silently skipping the bf16 rounding
+— which destroys error-free transformations (the computed roundoff becomes
+0). We therefore emulate the low-precision FPU explicitly: all arithmetic
+runs in f32 "registers" with ``jax.lax.reduce_precision`` (round-to-nearest-
+even onto the target grid) after every operation. ``reduce_precision`` is
+opaque to the algebraic simplifier, and storage converts are *exact* because
+values are already on the target grid — so no XLA rewrite can change
+results. This is also precisely how the TPU VPU executes bf16 elementwise
+ops (f32 lanes + rounding), so the Pallas kernel uses the identical recipe.
+
+Double rounding (f32-RN then target-RN) is provably innocuous for targets
+with p ≤ 11 significand bits (requires intermediate ≥ 2p+2 bits; 24 ≥ 24).
+
+All routines are dtype-generic over the component dtype (bf16 default; fp16
+supported; fp8 experimental). Validated in tests/test_mcf.py against a
+float64 oracle, including under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# (exponent_bits, mantissa_bits) for lax.reduce_precision, per target format.
+_FMT = {
+    jnp.dtype(jnp.bfloat16): (8, 7),
+    jnp.dtype(jnp.float16): (5, 10),
+    jnp.dtype(jnp.float32): (8, 23),
+    jnp.dtype(jnp.float8_e4m3fn): (4, 3),
+    jnp.dtype(jnp.float8_e5m2): (5, 2),
+}
+
+# significand bits (incl. hidden bit)
+_SIG_BITS = {k: v[1] + 1 for k, v in _FMT.items()}
+
+_EMIN = {
+    jnp.dtype(jnp.bfloat16): -126, jnp.dtype(jnp.float16): -14,
+    jnp.dtype(jnp.float32): -126, jnp.dtype(jnp.float8_e4m3fn): -6,
+    jnp.dtype(jnp.float8_e5m2): -14,
+}
+
+
+class StrictFPU:
+    """Correctly-rounded low-precision FPU emulated in f32 registers.
+
+    Values flowing through a ``StrictFPU`` are f32 arrays that always lie
+    exactly on the target dtype's grid. ``load``/``store`` convert to/from
+    the storage dtype (both exact)."""
+
+    def __init__(self, dtype):
+        self.dtype = jnp.dtype(dtype)
+        self.eb, self.mb = _FMT[self.dtype]
+
+    # -- rounding / boundaries ------------------------------------------
+    def rn(self, x32: jax.Array) -> jax.Array:
+        """Round-to-nearest-even onto the target grid (stays f32)."""
+        return jax.lax.reduce_precision(x32, self.eb, self.mb)
+
+    def load(self, x: jax.Array) -> jax.Array:
+        return x.astype(jnp.float32)
+
+    def store(self, x32: jax.Array) -> jax.Array:
+        return x32.astype(self.dtype)      # exact: x32 is on-grid
+
+    def cast(self, x32: jax.Array) -> jax.Array:
+        """RN an off-grid f32 value onto the grid (single rounding)."""
+        return self.rn(x32)
+
+    # -- correctly rounded primitive ops --------------------------------
+    def add(self, a, b):
+        return self.rn(a + b)
+
+    def sub(self, a, b):
+        return self.rn(a - b)
+
+    def mul(self, a, b):
+        return self.rn(a * b)
+
+    def div(self, a, b):
+        return self.rn(a / b)
+
+
+def fpu(dtype) -> StrictFPU:
+    return StrictFPU(dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Expansion:
+    """Length-2 MCF expansion: unevaluated sum ``hi + lo`` (Def. 2.1).
+
+    ``hi`` is the round-to-nearest approximation of the represented value;
+    ``lo`` carries the roundoff. Registered as a pytree so expansions nest
+    into optimizer states and shard like ordinary params (both leaves carry
+    identical sharding — the reason Collage composes with FSDP for free).
+    """
+
+    hi: jax.Array
+    lo: jax.Array
+
+    def tree_flatten(self):
+        return (self.hi, self.lo), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def dtype(self):
+        return self.hi.dtype
+
+    @property
+    def shape(self):
+        return self.hi.shape
+
+    @property
+    def size(self):
+        return self.hi.size
+
+    def value(self, dtype=jnp.float32) -> jax.Array:
+        """Evaluate the expansion in a wider dtype (diagnostics only)."""
+        return self.hi.astype(dtype) + self.lo.astype(dtype)
+
+
+def zeros_like_expansion(x: jax.Array) -> Expansion:
+    return Expansion(x, jnp.zeros_like(x))
+
+
+# --------------------------------------------------------------------------
+# Error-free transformations. Storage-dtype in, storage-dtype out; all
+# internal arithmetic through the StrictFPU registers.
+# --------------------------------------------------------------------------
+
+def fast2sum(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dekker's Fast2Sum (Thm 4.1): requires |a| ≥ |b| (or exp(a) ≥ exp(b)).
+
+    Returns (x, y) with x = RN(a+b) and x + y == a + b exactly. In the
+    Collage update the precondition holds structurally: |θ| ≥ |Δθ| at the
+    parameter-update step (Paper Fig. 2)."""
+    f = fpu(a.dtype)
+    a32, b32 = f.load(a), f.load(b)
+    x = f.add(a32, b32)
+    y = f.sub(b32, f.sub(x, a32))
+    return f.store(x), f.store(y)
+
+
+def two_sum(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Knuth's TwoSum (App. C Alg. 2): branch-free, no magnitude precondition."""
+    f = fpu(a.dtype)
+    a32, b32 = f.load(a), f.load(b)
+    x = f.add(a32, b32)
+    b_virtual = f.sub(x, a32)
+    a_virtual = f.sub(x, b_virtual)
+    b_roundoff = f.sub(b32, b_virtual)
+    a_roundoff = f.sub(a32, a_virtual)
+    y = f.add(a_roundoff, b_roundoff)
+    return f.store(x), f.store(y)
+
+
+def split(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dekker/Veltkamp Split (App. C Alg. 3). Kept for completeness/tests;
+    the production two_prod path uses the exact-f32 product instead."""
+    f = fpu(a.dtype)
+    p = _SIG_BITS[f.dtype]
+    c = p - (p // 2)
+    a32 = f.load(a)
+    t = f.mul(jnp.float32(2.0 ** c + 1.0), a32)
+    a_hi = f.sub(t, f.sub(t, a32))
+    a_lo = f.sub(a32, a_hi)
+    return f.store(a_hi), f.store(a_lo)
+
+
+def two_prod(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """TwoProdFMA-equivalent (App. C Alg. 5), TPU-native realization.
+
+    x = RN(a⊙b); e = a·b − x exactly. For components with p ≤ 11 significand
+    bits the product a·b is *exact* in f32 (2p ≤ 24), so the error term needs
+    no FMA: e = prod32 − x32 (exact by construction, representable in the
+    component dtype per Dekker's theorem). Bit-identical to CUDA TwoProdFMA.
+    """
+    f = fpu(a.dtype)
+    a32, b32 = f.load(a), f.load(b)
+    prod32 = a32 * b32                  # exact in f32 for p ≤ 11 components
+    x = f.rn(prod32)
+    e = f.rn(prod32 - x)                # exact; rn is a no-op safeguard
+    return f.store(x), f.store(e)
+
+
+def grow(e: Expansion, a: jax.Array) -> Expansion:
+    """Grow (Paper Alg. 1): add float ``a`` to expansion ``(x, y)``.
+
+    Precondition |x| ≥ |a| holds at the Collage update step; we use the
+    branch-free two_sum for the first combine so the routine stays correct
+    even when a transient update exceeds the parameter (e.g. θ≈0 at init),
+    at the cost of 3 extra VPU ops. Matches Alg. 1 otherwise."""
+    f = fpu(e.hi.dtype)
+    x32, y32, a32 = f.load(e.hi), f.load(e.lo), f.load(a)
+    # TwoSum(x, a)
+    u = f.add(x32, a32)
+    a_virt = f.sub(u, x32)
+    x_virt = f.sub(u, a_virt)
+    v = f.add(f.sub(a32, a_virt), f.sub(x32, x_virt))
+    # Fast2Sum(u, y + v)
+    t = f.add(y32, v)
+    u2 = f.add(u, t)
+    v2 = f.sub(t, f.sub(u2, u))
+    return Expansion(f.store(u2), f.store(v2))
+
+
+def scaling(e: Expansion, v: jax.Array) -> Expansion:
+    """Scaling (App. C Alg. 6): expansion × float."""
+    f = fpu(e.hi.dtype)
+    x, err = two_prod(e.hi, v)
+    x32, err32 = f.load(x), f.load(err)
+    err32 = f.add(f.mul(f.load(e.lo), f.load(v)), err32)
+    x2 = f.add(x32, err32)
+    e2 = f.sub(err32, f.sub(x2, x32))
+    return Expansion(f.store(x2), f.store(e2))
+
+
+def mul(a: Expansion, b: Expansion) -> Expansion:
+    """Mul (App. C Alg. 7): expansion × expansion, O(ulp²) error."""
+    f = fpu(a.hi.dtype)
+    x, e = two_prod(a.hi, b.hi)
+    x32, e32 = f.load(x), f.load(e)
+    cross = f.add(f.mul(f.load(a.hi), f.load(b.lo)),
+                  f.mul(f.load(a.lo), f.load(b.hi)))
+    e32 = f.add(e32, cross)
+    x2 = f.add(x32, e32)
+    lo2 = f.sub(e32, f.sub(x2, x32))
+    return Expansion(f.store(x2), f.store(lo2))
+
+
+def add_expansion(a: Expansion, b: Expansion) -> Expansion:
+    """Expansion + expansion → length-2 expansion (renormalized)."""
+    s_hi, s_lo = two_sum(a.hi, b.hi)
+    f = fpu(a.hi.dtype)
+    t = f.add(f.load(a.lo), f.load(b.lo))
+    t = f.add(f.load(s_lo), t)
+    x = f.add(f.load(s_hi), t)
+    lo = f.sub(t, f.sub(x, f.load(s_hi)))
+    return Expansion(f.store(x), f.store(lo))
+
+
+def from_float(x: float | jax.Array, dtype=jnp.bfloat16,
+               shape: tuple = ()) -> Expansion:
+    """Exactly represent a (python/f64/f32) scalar as a length-2 expansion.
+
+    E.g. 0.999 → (1.0, −0.000999…) in bf16 — Paper Table 1. The residual is
+    computed in f32, exact for the β-like constants in play."""
+    f = fpu(dtype)
+    wide = jnp.asarray(x, dtype=jnp.float32)
+    hi = f.rn(wide)
+    lo = f.rn(wide - hi)
+    hi = jnp.broadcast_to(f.store(hi), shape)
+    lo = jnp.broadcast_to(f.store(lo), shape)
+    return Expansion(hi, lo)
+
+
+def ulp(x: jax.Array) -> jax.Array:
+    """Unit in the last place (Def. 3.1) for the dtype of x, elementwise."""
+    dt = jnp.dtype(x.dtype)
+    p = _SIG_BITS[dt]
+    e_min = _EMIN[dt]
+    xf = jnp.abs(x.astype(jnp.float32))
+    # Extract the unbiased exponent from the f32 bit pattern (exact — XLA's
+    # exp2 is off by an ulp for integer args on some backends).
+    bits = jax.lax.bitcast_convert_type(jnp.where(xf > 0, xf, 1.0), jnp.uint32)
+    e = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    e = jnp.maximum(e, e_min) - (p - 1)
+    return jax.lax.bitcast_convert_type(
+        ((e + 127).astype(jnp.uint32) << 23), jnp.float32)
+
+
+def stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """Stochastic rounding f32 → ``dtype`` (App. B; Trainium-supported).
+
+    Unbiased: E[SR(x)] = x. For bf16: add uniform 16-bit noise below the
+    kept mantissa bits of the f32 representation, then truncate — carries
+    propagate with exactly the right probability. Bit ops are opaque to XLA
+    so no excess-precision hazard."""
+    if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+        bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+        noise = jax.random.randint(key, x.shape, 0, 1 << 16, dtype=jnp.uint32)
+        rounded = bits + noise
+        out = jax.lax.bitcast_convert_type(
+            rounded & jnp.uint32(0xFFFF0000), jnp.float32)
+        return out.astype(jnp.bfloat16)
+    # generic path via ulp arithmetic
+    f = fpu(dtype)
+    lo = f.rn(x)
+    lo = jnp.where(lo > x, lo - ulp(f.store(lo)).astype(jnp.float32), lo)
+    gap = ulp(f.store(lo)).astype(jnp.float32)
+    frac = (x - lo) / gap
+    up = jax.random.uniform(key, x.shape) < frac
+    return f.store(jnp.where(up, lo + gap, lo))
+
+
+def tree_expansion(tree: Any) -> Any:
+    """Lift a pytree of arrays into a pytree of zero-residual expansions."""
+    return jax.tree_util.tree_map(zeros_like_expansion, tree)
+
+
+def is_expansion(x: Any) -> bool:
+    return isinstance(x, Expansion)

@@ -1,0 +1,183 @@
+"""Sharding rules: param/optimizer/activation/cache PartitionSpecs.
+
+Strategy (DESIGN.md §4): FSDP×TP.
+  * TP ("model" axis): attention Q/KV/O head dims, MLP hidden dim, MoE
+    *expert* dim (expert parallelism), Mamba/RWKV inner channel dims,
+    vocab-parallel embedding/head.
+  * FSDP ("data" axis, + "pod" when the pod axis plays dp): the other large
+    dim of every weight — ZeRO-3-style; GSPMD inserts the just-in-time
+    all-gathers. Collage optimizer state (δθ, m, v, δv) shards *identically*
+    to its parameter (pure elementwise update ⇒ zero extra collectives).
+  * Sequence: long-context decode shards the KV cache length over "data"
+    (context parallelism); activations shard batch over dp axes.
+
+Rules are *name-based* (the last named path component) + rank-based (a
+leading layer-stack dim from scan-over-layers gets a None prepended), so one
+table covers all 10 architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name → base spec (without the layer-stack dim). "F" marks the FSDP slot.
+_F = "__fsdp__"
+_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": ("model", _F),            # (V, D) vocab-parallel
+    "lm_head": (_F, "model"),          # (D, V)
+    # attention
+    "wq": (_F, "model"), "wk": (_F, "model"), "wv": (_F, "model"),
+    "wo": ("model", _F),
+    "q_norm": (None,), "k_norm": (None,),
+    # dense MLP
+    "w_gate": (_F, "model"), "w_up": (_F, "model"), "w_down": ("model", _F),
+    "w_in": (_F, "model"), "w_out": ("model", _F),
+    # MoE (expert-parallel over "model")
+    "router": (None, None),
+    "we_gate": ("model", _F, None), "we_up": ("model", _F, None),
+    "we_down": ("model", None, _F),
+    # Mamba
+    "in_proj": (_F, "model"), "out_proj": ("model", _F),
+    "conv_w": (None, "model"), "x_proj": ("model", None),
+    "dt_proj": (None, "model"), "dt_bias": ("model",),
+    "A_log": ("model", None), "D": ("model",),
+    # RWKV6
+    "wr": (_F, "model"), "wg": (_F, "model"),
+    "w_a": (_F, None), "w_b": (None, "model"),
+    "u": (None, None), "mu": (None, None), "ln_scale": (None,),
+    "w0": (None,),
+    # norms
+    "norm": (None,), "final_norm": (None,),
+}
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _last_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            name = str(entry.name)
+            if name not in ("hi", "lo"):   # Expansion components follow param
+                return name
+    return ""
+
+
+_ATTN_NAMES = {"wq", "wk", "wv", "wo", "q_norm", "k_norm"}
+
+
+def param_spec(path, leaf, mesh: Mesh, fsdp: bool = True,
+               tp_mode: str = "full") -> P:
+    """tp_mode: "full" (default) | "mlponly" (attention replicated across
+    the model axis — for archs whose head counts don't divide it, killing
+    GSPMD resharding storms) | "none" (pure FSDP; model axis idle)."""
+    name = _last_name(path)
+    base = _RULES.get(name)
+    if base is None:
+        return P()                         # replicate unknown/small leaves
+    if tp_mode == "none" or (tp_mode == "mlponly" and name in _ATTN_NAMES):
+        base = tuple(None if s == "model" else s for s in base)
+    fs = _dp_axes(mesh) if fsdp else None
+    base = tuple(fs if s == _F else s for s in base)
+    extra = leaf.ndim - len(base)
+    assert extra in (0, 1), (name, leaf.ndim, base)
+    spec = (None,) * extra + base          # leading layer-stack dim
+    # drop axis shardings whose size doesn't divide the dim (pjit arguments
+    # require exact divisibility — e.g. vocab 49155 stays replicated/padded)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, s in zip(leaf.shape, spec):
+        names = s if isinstance(s, tuple) else ((s,) if s else ())
+        n = 1
+        for a in names:
+            n *= sizes[a]
+        fixed.append(s if n > 1 and dim % n == 0 else None)
+    return P(*fixed)
+
+
+def state_shardings(abstract_tree: Any, mesh: Mesh, fsdp: bool = True,
+                    tp_mode: str = "full") -> Any:
+    """NamedShardings for a TrainState/params pytree (path-rule based)."""
+    def leaf_fn(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, mesh, fsdp, tp_mode))
+    return jax.tree_util.tree_map_with_path(leaf_fn, abstract_tree)
+
+
+def batch_shardings(abstract_batch: Any, mesh: Mesh) -> Any:
+    dp = _dp_axes(mesh)
+
+    def leaf_fn(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n = 1
+        for a in (dp if isinstance(dp, tuple) else (dp,)):
+            n *= sizes[a] if a else 1
+        if leaf.shape[0] % max(n, 1) != 0:   # e.g. long_500k batch=1
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+    return jax.tree_util.tree_map_with_path(leaf_fn, abstract_batch)
+
+
+def cache_shardings(abstract_caches: Any, mesh: Mesh,
+                    context_parallel: bool = False) -> Any:
+    """KV caches: batch over dp, heads/channels over model. When
+    ``context_parallel`` (long_500k, batch=1): cache LENGTH over "data"."""
+    dp = _dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_dp = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= sizes[a] if a else 1
+
+    def leaf_fn(path, leaf):
+        name = _last_name(path)
+        bdim = leaf.shape[1] if leaf.ndim > 1 else 1
+        bshard = dp if (leaf.ndim > 1 and bdim % n_dp == 0) else None
+        if name in ("k", "v") and leaf.ndim == 5:   # (layers, B, S, hk, dh)
+            hk = leaf.shape[3]
+            hshard = "model" if hk % sizes.get("model", 1) == 0 else None
+            if context_parallel:
+                sshard = "data" if leaf.shape[2] % sizes.get("data", 1) == 0 \
+                    else None
+                return NamedSharding(mesh, P(None, None, sshard, hshard, None))
+            return NamedSharding(mesh, P(None, bshard, None, hshard, None))
+        if name == "h" and leaf.ndim == 4:          # mamba (layers, B, d_in, n)
+            return NamedSharding(mesh, P(None, bshard, "model", None))
+        if name == "S" and leaf.ndim == 5:          # rwkv (layers, B, H, dk, dv)
+            hshard = "model" if leaf.shape[2] % sizes.get("model", 1) == 0 else None
+            return NamedSharding(mesh, P(None, bshard, hshard, None, None))
+        if name == "conv" and leaf.ndim == 4:       # (layers, B, K-1, d_in)
+            return NamedSharding(mesh, P(None, bshard, None, "model"))
+        if name == "last_x" and leaf.ndim == 3:     # (layers, B, D)
+            return NamedSharding(mesh, P(None, bshard, None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(leaf_fn, abstract_caches)
+
+
+def make_activation_sharder(mesh: Mesh, sp: bool = False):
+    """The fn installed into models.transformer.activation_sharding.
+
+    sp=True: Korthikanti-style sequence parallelism — residual-stream
+    activations between blocks are sharded over the *model* axis on the
+    sequence dim, so GSPMD lowers the TP boundary all-reduces into
+    reduce-scatter (+ all-gather at the next matmul): half the wire bytes
+    and the norms/elementwise run on 1/tp of the tokens."""
+    dp = _dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+
+    def fn(x, kind):
+        if x.ndim == 3:
+            seq_axis = "model" if (sp and x.shape[1] % tp == 0) else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, seq_axis, None)))
+        return x
+    return fn

@@ -1,0 +1,145 @@
+"""Fused Collage-AdamW Pallas-TPU kernel (Paper Remark 5.2).
+
+One HBM round-trip for the entire Algorithm 2 update: each grid step loads
+(8,128)-aligned VMEM tiles of {g, θ, δθ, m, v(, δv)}, runs the full
+EMA + bias-corrected update + Grow/Mul MCF pipeline in fp32 VPU registers
+with explicit round-to-nearest onto the bf16 grid, and stores the bf16
+tiles back — 6 reads + 5 writes of 2 bytes/param for Collage-plus vs the
+≥4×4B reads + 3×4B writes of the fp32-master-weight path (option D).
+
+Numeric discipline matches repro.core.mcf exactly (the ref.py oracle):
+``lax.reduce_precision`` realizes each bf16 rounding; on real TPU hardware
+the same sequence maps to native bf16 VPU ops (which are RN by spec) — the
+explicit form is also what interpret-mode validation executes, so CPU
+validation covers the exact arithmetic the TPU performs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128       # TPU VPU lane count: last dim of every tile
+SUBLANES = 8      # (8, 128) is the fp32/bf16 VMEM native tile
+BLOCK_ROWS = 256  # rows per grid step → (256, 128) tiles, 64 KiB bf16 each
+
+
+def _rn(x):  # round-to-nearest-even onto the bf16 grid, stays f32
+    return jax.lax.reduce_precision(x, 8, 7)
+
+
+def _two_sum(a, b):
+    x = _rn(a + b)
+    bv = _rn(x - a)
+    av = _rn(x - bv)
+    return x, _rn(_rn(b - bv) + _rn(a - av))
+
+
+def _fast2sum(a, b):
+    x = _rn(a + b)
+    return x, _rn(b - _rn(x - a))
+
+
+def _grow(hi, lo, a):
+    u, v = _two_sum(hi, a)
+    return _fast2sum(u, _rn(lo + v))
+
+
+def _mul_expansion(a_hi, a_lo, b_hi, b_lo):
+    prod = a_hi * b_hi                    # exact in f32 (bf16 inputs)
+    x = _rn(prod)
+    e = _rn(prod - x)
+    cross = _rn(_rn(a_hi * b_lo) + _rn(a_lo * b_hi))
+    e = _rn(e + cross)
+    return _fast2sum(x, e)
+
+
+def collage_update_kernel(
+        # scalar-ish (1,1) f32 blocks
+        lr_ref, bc1_ref, bc2_ref,
+        # bf16 tiles
+        g_ref, theta_ref, delta_ref, m_ref, vhi_ref, vlo_ref,
+        # outputs
+        theta_out, delta_out, m_out, vhi_out, vlo_out,
+        *, b1: float, b2: float, eps: float, wd: float, strategy: str):
+    lr = lr_ref[0, 0]
+    bc1 = bc1_ref[0, 0]
+    bc2 = bc2_ref[0, 0]
+    f32 = jnp.float32
+    g = g_ref[...].astype(f32)
+    theta = theta_ref[...].astype(f32)
+    m = m_ref[...].astype(f32)
+    vhi = vhi_ref[...].astype(f32)
+
+    cb1, c1m = _rn(f32(b1)), _rn(f32(1.0 - b1))
+    cb2, c2m = _rn(f32(b2)), _rn(f32(1.0 - b2))
+    m_new = _rn(_rn(cb1 * m) + _rn(c1m * g))
+    g2 = _rn(g * g)
+
+    if strategy == "C":
+        vlo = vlo_ref[...].astype(f32)
+        b2hi = _rn(f32(b2))
+        b2lo = _rn(f32(b2) - b2hi)
+        ph, plo = _mul_expansion(b2hi, b2lo, vhi, vlo)
+        vhi_new, vlo_new = _grow(ph, plo, _rn(c2m * g2))
+        vhat = (vhi_new + vlo_new) / bc2
+    else:  # "A"/"B": β₂ cast to bf16 (the paper's failure mode, kept faithful)
+        vhi_new = _rn(_rn(cb2 * vhi) + _rn(c2m * g2))
+        vlo_new = vlo_ref[...].astype(f32)
+        vhat = vhi_new / bc2
+
+    mhat = m_new / bc1
+    upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * theta)
+    upd16 = _rn(upd)
+
+    if strategy == "A":
+        theta_new = _rn(theta + upd16)
+        delta_new = delta_ref[...].astype(f32)
+    else:  # B / C: Grow into the (θ, δθ) expansion
+        delta = delta_ref[...].astype(f32)
+        theta_new, delta_new = _grow(theta, delta, upd16)
+
+    theta_out[...] = theta_new.astype(jnp.bfloat16)
+    delta_out[...] = delta_new.astype(jnp.bfloat16)
+    m_out[...] = m_new.astype(jnp.bfloat16)
+    vhi_out[...] = vhi_new.astype(jnp.bfloat16)
+    vlo_out[...] = vlo_new.astype(jnp.bfloat16)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "b1", "b2", "eps", "wd", "strategy", "interpret", "block_rows"))
+def collage_update(g, theta, delta, m, vhi, vlo, lr, bc1, bc2, *,
+                   b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C",
+                   interpret=True, block_rows=BLOCK_ROWS):
+    """Apply the fused update to 1-D bf16 arrays of identical length N
+    (N must be a multiple of 128; the ops.py wrapper pads/flattens)."""
+    n = g.shape[0]
+    assert n % LANES == 0, n
+    rows = n // LANES
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+    grid = (rows // br,)
+
+    def t2(x):
+        return x.reshape(rows, LANES)
+
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    kernel = functools.partial(collage_update_kernel, b1=b1, b2=b2, eps=eps,
+                               wd=wd, strategy=strategy)
+    out_shape = [jax.ShapeDtypeStruct((rows, LANES), jnp.bfloat16)] * 5
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scal, scal, scal] + [tile] * 6,
+        out_specs=[tile] * 5,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.reshape(lr, (1, 1)).astype(jnp.float32),
+      jnp.reshape(bc1, (1, 1)).astype(jnp.float32),
+      jnp.reshape(bc2, (1, 1)).astype(jnp.float32),
+      t2(g), t2(theta), t2(delta), t2(m), t2(vhi), t2(vlo))
+    return tuple(o.reshape(n) for o in outs)

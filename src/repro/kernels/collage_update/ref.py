@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused Collage-AdamW kernel: literally the
+non-fused per-leaf update from repro.core.collage applied to flat arrays —
+the kernel must be bit-identical to the library semantics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import mcf
+from repro.core.mcf import Expansion
+
+
+def collage_update_ref(g, theta, delta, m, vhi, vlo, lr, bc1, bc2, *,
+                       b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C"):
+    f32 = jnp.float32
+    fpu = mcf.fpu(jnp.bfloat16)
+    g32 = fpu.load(g)
+    theta32 = fpu.load(theta)
+    cb1, c1m = fpu.rn(f32(b1)), fpu.rn(f32(1 - b1))
+    cb2, c2m = fpu.rn(f32(b2)), fpu.rn(f32(1 - b2))
+    m32 = fpu.add(fpu.mul(cb1, fpu.load(m)), fpu.mul(c1m, g32))
+    g2 = fpu.mul(g32, g32)
+    if strategy == "C":
+        b2e = mcf.from_float(b2, jnp.bfloat16, vhi.shape)
+        v = mcf.grow(mcf.mul(b2e, Expansion(vhi, vlo)),
+                     fpu.store(fpu.mul(c2m, g2)))
+        vhi_new, vlo_new = v.hi, v.lo
+        vhat = v.value(f32) / bc2
+    else:
+        v32 = fpu.add(fpu.mul(cb2, fpu.load(vhi)), fpu.mul(c2m, g2))
+        vhi_new, vlo_new = fpu.store(v32), vlo
+        vhat = v32 / bc2
+    mhat = m32 / bc1
+    upd32 = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * theta32)
+    upd16 = fpu.store(fpu.rn(upd32))
+    if strategy == "A":
+        theta_new = fpu.store(fpu.add(theta32, fpu.rn(upd32)))
+        delta_new = delta
+    else:
+        e = mcf.grow(Expansion(theta, delta), upd16)
+        theta_new, delta_new = e.hi, e.lo
+    return theta_new, delta_new, fpu.store(m32), vhi_new, vlo_new

@@ -1,0 +1,51 @@
+"""Fused EDQ-metric Pallas kernel (Paper Def. 3.3 diagnostics).
+
+Computing EDQ naively costs three extra HBM passes over Δθ/Δθ̂ (dot, norm²,
+lost-count). This kernel produces all partials in ONE pass: per grid block it
+accumulates ⟨Δθ, Δθ̂⟩, ‖Δθ‖², ‖Δθ̂‖², and the lost-arithmetic count into a
+(grid, 4) partial buffer; the tiny final reduction happens in the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 512
+
+
+def edq_kernel(upd_ref, eff_ref, out_ref):
+    u = upd_ref[...].astype(jnp.float32)
+    e = eff_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(u * e)
+    out_ref[0, 1] = jnp.sum(u * u)
+    out_ref[0, 2] = jnp.sum(e * e)
+    out_ref[0, 3] = jnp.sum(((jnp.abs(u) > 0) & (e == 0)).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def edq_metrics(upd, eff, *, interpret=True, block_rows=BLOCK_ROWS):
+    """upd/eff: 1-D f32 arrays (N % 128 == 0). Returns dict of scalars."""
+    n = upd.shape[0]
+    assert n % LANES == 0
+    rows = n // LANES
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+    grid = (rows // br,)
+    partials = pl.pallas_call(
+        edq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, LANES), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 4), jnp.float32),
+        interpret=interpret,
+    )(upd.reshape(rows, LANES), eff.reshape(rows, LANES))
+    dot, un2, en2, lost = [partials[:, i].sum() for i in range(4)]
+    un = jnp.sqrt(un2)
+    return {"edq": dot / jnp.maximum(un, 1e-30), "update_norm": un,
+            "effective_norm": jnp.sqrt(en2),
+            "imprecision_pct": 100.0 * lost / n}

@@ -1,0 +1,91 @@
+"""FlashAttention forward Pallas-TPU kernel (causal + sliding-window, GQA).
+
+VMEM tiling: grid = (batch, q_heads, Lq/BLK_Q); each program streams KV
+blocks of BLK_K with the online-softmax recurrence entirely in VMEM —
+scores never touch HBM (the O(L²) buffer the masked baseline materializes).
+GQA is FREE here: the kv BlockSpec index-maps head h → h // group, so KV
+heads are never replicated in memory.
+
+Used by the serving path at ≥8k sequence; oracle = models.attention
+reference (full softmax), swept over shapes/dtypes in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
+                  seq_len: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (blk_q, dh)
+    nk = seq_len // blk_k
+    m = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((blk_q,), jnp.float32)
+    acc = jnp.zeros((blk_q, q.shape[-1]), jnp.float32)
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(jnp.float32)
+        s = q @ k.T                                       # (blk_q, blk_k)
+        qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        bad = jnp.zeros(s.shape, bool)
+        if causal:
+            bad |= kpos > qpos
+        if window:
+            bad |= kpos <= qpos - window
+        s = jnp.where(bad, NEG_INF, s)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # causal: skip key blocks strictly after this query block
+    hi = (qi + 1) * blk_q if causal else seq_len
+    n_iter = (hi + blk_k - 1) // blk_k if causal else nk
+    lo = 0
+    if window:  # skip key blocks entirely below the band
+        lo = jnp.maximum(0, (qi * blk_q - window) // blk_k)
+        lo = int(lo) if isinstance(lo, int) else lo
+    m, l, acc = jax.lax.fori_loop(lo, n_iter, body, (m, l, acc))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
+                    interpret=True):
+    """q: (B, H, L, dh); k/v: (B, Hkv, L, dh) with H % Hkv == 0.
+    Returns (B, H, L, dh) in q.dtype. L % blk == 0 (wrapper pads)."""
+    B, H, L, dh = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    blk_q = min(blk_q, L)
+    blk_k = min(blk_k, L)
+    assert L % blk_q == 0 and L % blk_k == 0
+    scale = dh ** -0.5
+    kernel = functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+                               seq_len=L, causal=causal, window=window,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, L // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+            # GQA: kv head = q head // group; full-length K/V block resident
+            pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel: full masked softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, H, L, dh); k/v: (B, Hkv, S, dh). fp32 softmax reference."""
+    B, H, L, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = H // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhld,bhsd->bhls", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * dh ** -0.5
+    qi = jnp.arange(L)[:, None]
+    kj = jnp.arange(S)[None, :]
+    bad = jnp.zeros((L, S), bool)
+    if causal:
+        bad |= kj > qi
+    if window:
+        bad |= kj <= qi - window
+    s = jnp.where(bad[None, None], NEG_INF, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhls,bhsd->bhld", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on
+# first init. 512 placeholder host devices back both production meshes
+# (16×16 single-pod uses the first 256; 2×16×16 multi-pod uses all 512).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+record memory/cost/collective analysis for §Dry-run and §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k [--multi-pod] [--precision C] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Results are cached as JSON under experiments/dryrun/<mesh>/<arch>__<shape>.json
+(re-runs skip cached cells unless --force): the roofline/benchmark layers
+read these artifacts instead of recompiling.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, get_config
+from repro.core.collage import CollageAdamW
+from repro.core.precision import PrecisionPolicy, parse_strategy
+from repro.distributed import sharding as shard_lib
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models.model import build_model
+from repro.models.transformer import activation_sharding
+from repro.train import train_loop
+from repro.utils import hlo_analysis
+
+SKIP = {}
+for _a in ASSIGNED:
+    _c = get_config(_a)
+    if not _c.supports_long_context:
+        SKIP[(_a, "long_500k")] = "full-attention arch: long_500k skipped per spec"
+
+
+def cell_config(arch: str, shape_name: str, overrides: dict | None = None):
+    """Per-cell model-config adjustments (documented in EXPERIMENTS.md).
+    ``overrides`` come from §Perf hillclimb variants (see parse_variant)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.seq_len >= 8192 and shape.mode != "decode":
+        cfg = dataclasses.replace(cfg, attention_impl="flash")
+    if cfg.family == "hybrid":
+        cfg = dataclasses.replace(cfg, ssm_chunk=16)
+    for k, v in (overrides or {}).items():
+        if k in ("attn",):
+            cfg = dataclasses.replace(cfg, attention_impl=v)
+        elif k == "ssmchunk":
+            cfg = dataclasses.replace(cfg, ssm_chunk=int(v))
+        elif k == "rwkvchunk":
+            cfg = dataclasses.replace(cfg, rwkv_chunk=int(v))
+        elif k == "window":
+            cfg = dataclasses.replace(cfg, window_size=int(v))
+        elif k == "moegroup":
+            cfg = dataclasses.replace(cfg, moe_group_size=int(v))
+    return cfg, shape
+
+
+def parse_variant(variant: str) -> dict:
+    """'attn=flash,accum=8,remat=dots,fsdp=0' → override dict."""
+    out = {}
+    for part in (variant or "").split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def accum_plan(cfg, shape, n_dp: int) -> tuple[int, int]:
+    """(grad_accum_steps, microbatch_global_rows): keep ≤~2 rows/device for
+    wide models under remat so activations fit 16 GB HBM."""
+    rows_per_dev = 4 if cfg.d_model <= 2048 else (2 if cfg.d_model <= 5376 else 1)
+    if shape.seq_len > 4096:
+        rows_per_dev = 1
+    mb_global = max(rows_per_dev * n_dp, 1)
+    n_acc = max(shape.global_batch // mb_global, 1)
+    mb_global = shape.global_batch // n_acc
+    return n_acc, mb_global
+
+
+def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
+               fsdp: bool = True, overrides: dict | None = None):
+    overrides = overrides or {}
+    fsdp = fsdp and overrides.get("fsdp", "1") != "0"
+    remat = overrides.get("remat", "full")
+    cfg, shape = cell_config(arch, shape_name, overrides)
+    model = build_model(cfg)
+    n_dp = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in ("pod", "data"):
+        n_dp *= sizes.get(a, 1)
+
+    opt = CollageAdamW(1e-4, b2=0.95, weight_decay=0.1,
+                       policy=PrecisionPolicy(strategy=parse_strategy(precision)))
+    tp_mode = overrides.get("tpmode", "full")
+    sp = overrides.get("sp", "0") == "1"
+    grad_compression = overrides.get("compress", "none")
+
+    sharder = shard_lib.make_activation_sharder(mesh, sp=sp)
+    with mesh, activation_sharding(sharder):
+        if shape.mode == "train":
+            n_acc, mb_global = accum_plan(cfg, shape, n_dp)
+            if "accum" in overrides:
+                n_acc = int(overrides["accum"])
+                mb_global = shape.global_batch // n_acc
+            state_abs = jax.eval_shape(
+                lambda: train_loop.init_state(model, opt, jax.random.PRNGKey(0)))
+            state_sh = shard_lib.state_shardings(state_abs, mesh, fsdp,
+                                                 tp_mode)
+            batch_abs = model.input_specs(shape)
+            dp = shard_lib._dp_axes(mesh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            def chunked(leaf):
+                if leaf.ndim == 0:
+                    return leaf, NamedSharding(mesh, P())
+                new = jax.ShapeDtypeStruct(
+                    (n_acc, leaf.shape[0] // n_acc) + leaf.shape[1:], leaf.dtype)
+                return new, NamedSharding(
+                    mesh, P(None, dp, *([None] * (leaf.ndim - 1))))
+
+            pairs = jax.tree_util.tree_map(chunked, batch_abs)
+            batch_abs = jax.tree_util.tree_map(
+                lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            batch_sh = jax.tree_util.tree_map(
+                lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            step = train_loop.make_train_step(
+                model, opt, remat=remat, grad_compression=grad_compression)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+            meta = {"grad_accum": n_acc, "microbatch_global": mb_global}
+        elif shape.mode == "prefill":
+            params_abs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = shard_lib.state_shardings(params_abs, mesh, fsdp,
+                                                  tp_mode)
+            batch_abs = model.input_specs(shape)
+            batch_sh = shard_lib.batch_shardings(batch_abs, mesh)
+
+            def prefill(params, batch):
+                return model.prefill(params, batch, cache_len=shape.seq_len)
+
+            jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+            meta = {}
+        else:  # decode
+            params_abs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = shard_lib.state_shardings(params_abs, mesh, fsdp,
+                                                  tp_mode)
+            specs = model.input_specs(shape)
+            ctx_par = shape.global_batch < n_dp
+            caches_sh = shard_lib.cache_shardings(specs["caches"], mesh,
+                                                  context_parallel=ctx_par)
+            tok_sh = shard_lib.batch_shardings(
+                {"token": specs["token"]}, mesh)["token"]
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pos_sh = NamedSharding(mesh, P())
+
+            def serve_step(params, caches, token, pos):
+                return model.decode_step(params, caches, token, pos)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(params_sh, caches_sh, tok_sh, pos_sh),
+                             out_shardings=(None, caches_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, specs["caches"],
+                                   specs["token"], specs["pos"])
+            meta = {"context_parallel": bool(ctx_par)}
+        t0 = time.time()
+        compiled = lowered.compile()
+        meta["compile_seconds"] = round(time.time() - t0, 1)
+    return cfg, shape, lowered, compiled, meta
+
+
+def analyze_cell(arch, shape_name, mesh_name, cfg, shape, compiled, meta):
+    n_chips = {"single_pod": 256, "multi_pod": 512}[mesh_name]
+    ca = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            mem_d[attr] = int(getattr(mem, attr))
+    costs = hlo_analysis.analyze(compiled.as_text())
+    if shape.mode == "decode":
+        tokens = shape.global_batch          # one new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.mode == "train" else 2) * n_active * tokens
+    per_dev = {
+        "hlo_flops": costs.flops,
+        "hlo_hbm_bytes_raw": costs.hbm_bytes,
+        "hlo_hbm_bytes_tpu": costs.hbm_bytes_tpu,
+        "collective_bytes": dict(costs.collective_bytes),
+        "collective_wire_bytes_raw": costs.collective_wire_bytes,
+        "collective_wire_bytes_tpu": costs.collective_wire_bytes_tpu,
+        "collective_counts": dict(costs.collective_counts),
+    }
+    # roofline terms use the TPU-equivalent traffic (CPU backend's f32
+    # convert buffers / copies corrected — see hlo_analysis.shape_bytes_tpu)
+    terms = {
+        "compute_s": costs.flops / HW["peak_flops_bf16"],
+        "memory_s": costs.hbm_bytes_tpu / HW["hbm_bw"],
+        "collective_s": costs.collective_wire_bytes_tpu / HW["ici_bw"],
+    }
+    dominant = max(terms, key=terms.get)
+    useful_ratio = (model_flops / n_chips) / costs.flops if costs.flops else 0.0
+    return {
+        "hbm_by_opcode": {k: v for k, v in sorted(
+            costs.hbm_by_opcode.items(), key=lambda kv: -kv[1])[:8]},
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips, "params": cfg.param_count(),
+        "active_params": n_active, "tokens_per_step": tokens,
+        "model_flops_total": model_flops,
+        "per_device": per_dev, "memory_analysis": mem_d,
+        "xla_cost_analysis": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed", "transcendentals")},
+        "roofline_terms_s": terms, "dominant": dominant,
+        "useful_flops_ratio": useful_ratio,
+        **meta,
+    }
+
+
+def run_cell(arch, shape_name, mesh_name, outdir, precision="C", force=False,
+             fsdp=True, save_hlo=True, variant=""):
+    import pathlib
+    import re as _re
+    suffix = "__" + _re.sub(r"[^\w=.-]", "_", variant) if variant else ""
+    out = pathlib.Path(outdir) / mesh_name / f"{arch}__{shape_name}{suffix}.json"
+    hlo_path = out.with_suffix(".hlo.zst")
+    if out.exists() and not force:
+        print(f"[cached] {mesh_name}/{arch}/{shape_name}{suffix}")
+        return json.loads(out.read_text())
+    if (arch, shape_name) in SKIP:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": SKIP[(arch, shape_name)]}
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+        t0 = time.time()
+        cfg, shape, lowered, compiled, meta = lower_cell(
+            arch, shape_name, mesh, precision,
+            overrides=parse_variant(variant))
+        meta["variant"] = variant
+        rec = analyze_cell(arch, shape_name, mesh_name, cfg, shape,
+                           compiled, meta)
+        rec["wall_seconds"] = round(time.time() - t0, 1)
+        if save_hlo:
+            import zstandard
+            out.parent.mkdir(parents=True, exist_ok=True)
+            hlo_path.write_bytes(
+                zstandard.ZstdCompressor(level=6).compress(
+                    compiled.as_text().encode()))
+        print(f"[ok] {mesh_name}/{arch}/{shape_name}{suffix}: "
+              f"dominant={rec['dominant']} "
+              f"terms={ {k: f'{v:.3e}' for k, v in rec['roofline_terms_s'].items()} }")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def reanalyze_cell(json_path):
+    """Offline re-analysis from the stored compressed HLO (no recompile)."""
+    import pathlib
+    import zstandard
+    p = pathlib.Path(json_path)
+    rec = json.loads(p.read_text())
+    if rec.get("skipped"):
+        return rec
+    hlo_path = p.with_suffix("").with_suffix(".hlo.zst")
+    if not hlo_path.exists():
+        return rec
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()).decode()
+    cfg, shape = cell_config(rec["arch"], rec["shape"])
+
+    class _FakeCompiled:
+        def as_text(self):
+            return text
+
+        def cost_analysis(self):
+            return {k: v for k, v in
+                    rec.get("xla_cost_analysis", {}).items()}
+
+        def memory_analysis(self):
+            return None
+
+    meta = {k: rec[k] for k in ("grad_accum", "microbatch_global",
+                                "context_parallel", "compile_seconds")
+            if k in rec}
+    new = analyze_cell(rec["arch"], rec["shape"], rec["mesh"], cfg, shape,
+                       _FakeCompiled(), meta)
+    new["memory_analysis"] = rec.get("memory_analysis", {})
+    new["wall_seconds"] = rec.get("wall_seconds")
+    p.write_text(json.dumps(new, indent=1))
+    return new
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--precision", default="C")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single_pod", "multi_pod"] if (args.both_meshes or args.all) \
+        else (["multi_pod"] if args.multi_pod else ["single_pod"])
+    failures = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    run_cell(arch, shape_name, mesh_name, args.outdir,
+                             args.precision, args.force,
+                             variant=args.variant)
+                except Exception:
+                    failures.append((mesh_name, arch, shape_name))
+                    print(f"[FAIL] {mesh_name}/{arch}/{shape_name}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("dry-run: all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

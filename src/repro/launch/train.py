@@ -1,0 +1,107 @@
+"""Training launcher: end-to-end driver (CPU-runnable; same step function the
+dry-run lowers for the production meshes).
+
+  PYTHONPATH=src python -m repro.launch.train --arch gpt-tiny --steps 200 \
+      --precision C [--resume] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.collage import CollageAdamW, cosine_schedule
+from repro.core.precision import PrecisionPolicy, parse_strategy
+from repro.data.synthetic import make_batch_fn
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import train_loop
+from repro.train.elastic import RunSupervisor, SupervisorConfig
+
+
+def build(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
+    model = build_model(cfg)
+    policy = PrecisionPolicy(strategy=parse_strategy(args.precision))
+    opt = CollageAdamW(
+        cosine_schedule(args.lr, args.warmup, args.steps),
+        b1=0.9, b2=args.b2, weight_decay=args.weight_decay, policy=policy,
+        compute_metrics=not args.no_metrics,
+        use_fused_kernel=args.fused_kernel)
+    step_fn = jax.jit(train_loop.make_train_step(
+        model, opt, microbatch=args.microbatch, remat=args.remat,
+        grad_compression=args.grad_compression))
+    batch_fn = make_batch_fn(cfg, shape, seed=args.seed)
+    return cfg, model, opt, step_fn, batch_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt-tiny")
+    ap.add_argument("--precision", default="C")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--b2", type=float, default=0.95)
+    ap.add_argument("--weight-decay", type=float, default=0.1)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--grad-compression", default="none")
+    ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--no-metrics", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg, model, opt, step_fn, batch_fn = build(args)
+    state = train_loop.init_state(model, opt, jax.random.PRNGKey(args.seed),
+                                  args.grad_compression)
+    start = 0
+    if args.resume:
+        latest = ckpt_lib.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state, extra = ckpt_lib.restore(args.ckpt_dir, latest, state)
+            start = extra["step"]
+            print(f"resumed from step {start}")
+
+    sup = RunSupervisor(SupervisorConfig(args.ckpt_dir, args.ckpt_every))
+    history = []
+    t0 = time.time()
+
+    def logged_step(state, batch):
+        state, metrics = step_fn(state, batch)
+        step = int(state.opt_state.step)
+        if step % args.log_every == 0 or step == 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} ppl {m['ppl']:.2f} "
+                  f"edq {m.get('edq', 0):.3e} impr% {m.get('imprecision_pct', 0):.2f}")
+        return state, metrics
+
+    state, step, _ = sup.run(state, logged_step, batch_fn, args.steps,
+                             start_step=start)
+    dt = time.time() - t0
+    tok = args.batch * args.seq_len * (step - start)
+    print(f"done: {step} steps, {dt:.1f}s, {tok / max(dt, 1e-9):.0f} tok/s")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f)
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""GQA attention: training/prefill (full, masked-local, banded-local) and
+single-token KV-cache decode.
+
+GQA is computed with grouped einsums — KV heads are never materialized
+repeated (memory matters at decode_32k/long_500k). Softmax in fp32.
+
+Two local-attention implementations (gemma3 5:1 pattern):
+  * "masked":  full L×L scores + band mask — baseline, O(L²) FLOPs.
+  * "banded":  block-banded computation — each query block attends to its
+    own + previous key block only, O(L·W) FLOPs. This is the beyond-paper
+    optimization used in the §Perf hillclimb; both paths are allclose-tested
+    against each other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACC, dense_init, matmul, rms_norm, rope_apply, rope_freqs
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 5)
+    p = {"wq": dense_init(ks[0], d, h * dh, dtype),
+         "wk": dense_init(ks[1], d, hk * dh, dtype),
+         "wv": dense_init(ks[2], d, hk * dh, dtype),
+         "wo": dense_init(ks[3], h * dh, d, dtype)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _qkv(p, x, x_kv, cfg, positions, kv_positions):
+    B, L, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = matmul(x, p["wq"]).reshape(B, L, h, dh)
+    k = matmul(x_kv, p["wk"]).reshape(B, x_kv.shape[1], hk, dh)
+    v = matmul(x_kv, p["wv"]).reshape(B, x_kv.shape[1], hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None and cfg.rope_theta > 0:  # NoPE archs skip rotary
+        cos, sin = rope_freqs(positions, dh, cfg.rope_theta)
+        q = rope_apply(q, cos, sin)
+        cos_k, sin_k = rope_freqs(kv_positions, dh, cfg.rope_theta)
+        k = rope_apply(k, cos_k, sin_k)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg):
+    """(B,L,H,dh)×(B,S,Hk,dh) → (B,Hk,G,L,S) grouped scores, fp32."""
+    B, L, h, dh = q.shape
+    hk = cfg.n_kv_heads
+    g = h // hk
+    qg = q.reshape(B, L, hk, g, dh)
+    return jnp.einsum("blkgd,bskd->bkgls", qg, k,
+                      preferred_element_type=ACC) * (dh ** -0.5)
+
+
+def _gqa_out(probs, v, cfg, dtype):
+    B, hk, g, L, S = probs.shape
+    out = jnp.einsum("bkgls,bskd->blkgd", probs.astype(dtype), v,
+                     preferred_element_type=ACC).astype(dtype)
+    return out.reshape(B, L, hk * g * v.shape[-1])
+
+
+def full_attention(p, x, cfg, *, causal=True, window=0, x_kv=None,
+                   positions=None, kv_positions=None):
+    """Training/prefill attention. window>0 adds a band mask ("masked" impl)."""
+    x_kv = x if x_kv is None else x_kv
+    B, L, _ = x.shape
+    S = x_kv.shape[1]
+    if positions is None and cfg.rope_theta > 0 and x_kv is x:
+        positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+        kv_positions = positions
+    q, k, v = _qkv(p, x, x_kv, cfg, positions, kv_positions)
+    scores = _gqa_scores(q, k, cfg)
+    qi = jnp.arange(L)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.zeros((L, S), bool)
+    if causal:
+        mask |= kj > qi
+    if window:
+        mask |= kj <= qi - window
+    scores = jnp.where(mask[None, None, None], NEG_INF, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg, x.dtype)
+    return matmul(out, p["wo"])
+
+
+def banded_attention(p, x, cfg, *, window, positions=None):
+    """O(L·W) local causal attention: queries in blocks of W attend to their
+    own + previous key block. Requires L % W == 0 (launcher pads)."""
+    B, L, D = x.shape
+    W = window
+    assert L % W == 0, (L, W)
+    nb = L // W
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    q, k, v = _qkv(p, x, x, cfg, positions, positions)
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hk
+    qb = q.reshape(B, nb, W, hk, g, dh)
+    kb = k.reshape(B, nb, W, hk, dh)
+    vb = v.reshape(B, nb, W, hk, dh)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)       # (B, nb, 2W, hk, dh)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    scores = jnp.einsum("bnwkgd,bnskd->bnkgws", qb, k2,
+                        preferred_element_type=ACC) * (dh ** -0.5)
+    qi = jnp.arange(W)[:, None] + W                  # position within 2W window
+    kj = jnp.arange(2 * W)[None, :]
+    mask = (kj > qi) | (kj <= qi - W)                # causal ∧ band
+    first = jnp.arange(nb) == 0                      # block 0 has no prev block
+    mask0 = mask | (kj < W)
+    m = jnp.where(first[:, None, None], mask0[None], mask[None])
+    scores = jnp.where(m[None, :, None, None], NEG_INF, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnkgws,bnskd->bnwkgd", probs.astype(x.dtype), v2,
+                     preferred_element_type=ACC).astype(x.dtype)
+    out = out.reshape(B, L, h * dh)
+    return matmul(out, p["wo"])
+
+
+def flash_attention(p, x, cfg, *, causal=True, window=0, positions=None,
+                    q_chunk=1024, kv_chunk=1024):
+    """Memory-bounded attention: online-softmax over KV chunks, scanned over
+    Q chunks — O(q_chunk·kv_chunk) score memory instead of O(L²). Used for
+    the ≥8k-sequence cells (prefill_32k / train long-seq); also the pure-jnp
+    oracle for the Pallas flash kernel."""
+    B, L, D = x.shape
+    q_chunk = min(q_chunk, L)
+    kv_chunk = min(kv_chunk, L)
+    assert L % q_chunk == 0 and L % kv_chunk == 0
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    q, k, v = _qkv(p, x, x, cfg, positions, positions)
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hk
+    nq, nk = L // q_chunk, L // kv_chunk
+    qs = q.reshape(B, nq, q_chunk, hk, g, dh)
+    ks = k.reshape(B, nk, kv_chunk, hk, dh)
+    vs = v.reshape(B, nk, kv_chunk, hk, dh)
+    scale = dh ** -0.5
+
+    def q_block(qi, q_blk):
+        # online softmax accumulators
+        m = jnp.full((B, hk, g, q_chunk), NEG_INF, ACC)
+        l = jnp.zeros((B, hk, g, q_chunk), ACC)
+        acc = jnp.zeros((B, hk, g, q_chunk, dh), ACC)
+
+        def kv_block(carry, kj):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_index_in_dim(ks, kj, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vs, kj, 1, keepdims=False)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k_blk,
+                           preferred_element_type=ACC) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            bad = jnp.zeros((q_chunk, kv_chunk), bool)
+            if causal:
+                bad |= kpos > qpos
+            if window:
+                bad |= kpos <= qpos - window
+            s = jnp.where(bad[None, None, None], NEG_INF, s)
+            m_new = jnp.maximum(m, s.max(-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p_.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p_.astype(x.dtype), v_blk,
+                preferred_element_type=ACC)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m, l, acc), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, h * dh)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), qs.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(B, L, h * dh).astype(x.dtype)
+    return matmul(out, p["wo"])
+
+
+# ------------------------------------------------------------- decoding ----
+def decode_attention(p, x, cfg, cache, pos, *, window=0):
+    """One-token decode: x (B,1,D); cache {"k","v"}: (B, S, Hk, dh).
+
+    Writes the new K/V at ``pos`` then attends over the first pos+1 entries
+    (masked). For local layers only the last ``window`` positions score."""
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, x, cfg, positions, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    scores = _gqa_scores(q, k, cfg)                  # (B,hk,g,1,S)
+    kj = jnp.arange(S)[None, None, None, None, :]
+    invalid = kj > pos
+    if window:
+        invalid |= kj <= pos - window
+    scores = jnp.where(invalid, NEG_INF, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg, x.dtype)
+    return matmul(out, p["wo"]), {"k": k, "v": v}
+
+
+def cross_kv(p, memory, cfg):
+    """Precompute cross-attention K/V from encoder memory (prefill-time)."""
+    B, F, _ = memory.shape
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    k = matmul(memory, p["wk"]).reshape(B, F, hk, dh)
+    v = matmul(memory, p["wv"]).reshape(B, F, hk, dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+def cross_decode(p, x, cfg, cache):
+    """Decode-time cross-attention against cached memory K/V (no rope)."""
+    B = x.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim_
+    q = matmul(x, p["wq"]).reshape(B, 1, h, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    scores = _gqa_scores(q, cache["k"], cfg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cache["v"], cfg, x.dtype)
+    return matmul(out, p["wo"])
+
+
+def init_kv_cache(cfg, batch, seq_len, dtype):
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((batch, seq_len, hk, dh), dtype),
+            "v": jnp.zeros((batch, seq_len, hk, dh), dtype)}

@@ -1,0 +1,81 @@
+"""Shared neural-net layers (pure-functional JAX, no framework deps).
+
+Numeric discipline (paper §2.1 "mixed-precision GEMM"): params/activations
+are stored in the policy dtype (bf16); every matmul accumulates in fp32 via
+``preferred_element_type`` (the TPU MXU native mode) and is rounded back to
+the storage dtype; norms/softmax run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACC = jnp.float32
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def matmul(x, w):
+    """Storage-dtype matmul with fp32 accumulation (MXU semantics)."""
+    return jnp.matmul(x, w, preferred_element_type=ACC).astype(x.dtype)
+
+
+def rms_norm(x, scale, eps):
+    xf = x.astype(ACC)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(ACC))).astype(x.dtype)
+
+
+def rms_norm_init(d, dtype):
+    return jnp.zeros((d,), dtype)  # (1 + scale) parameterization
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(positions, head_dim, theta):
+    """positions: (..., L) int32 → cos/sin (..., L, head_dim/2), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=ACC) / head_dim))
+    ang = positions.astype(ACC)[..., None] * inv  # (..., L, dh/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x, cos, sin):
+    """x: (B, L, H, dh); cos/sin: (B, L, dh/2) — rotate pairs."""
+    xf = x.astype(ACC)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP ----
+def mlp_init(key, d, f, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": dense_init(k1, d, f, dtype),
+                "w_up": dense_init(k2, d, f, dtype),
+                "w_down": dense_init(k3, f, d, dtype)}
+    return {"w_in": dense_init(k1, d, f, dtype),
+            "w_out": dense_init(k2, f, d, dtype)}
+
+
+def mlp_apply(p, x, act):
+    if act == "swiglu":
+        g = matmul(x, p["w_gate"])
+        u = matmul(x, p["w_up"])
+        h = (jax.nn.silu(g.astype(ACC)) * u.astype(ACC)).astype(x.dtype)
+        return matmul(h, p["w_down"])
+    h = jax.nn.gelu(matmul(x, p["w_in"]).astype(ACC)).astype(x.dtype)
+    return matmul(h, p["w_out"])

@@ -1,0 +1,174 @@
+"""Top-level Model API: init / forward / loss / prefill / decode_step /
+input_specs — uniform across all 10 assigned architecture families.
+
+Batch dict conventions:
+  train/prefill : {"tokens": (B, L) i32, "labels": (B, L) i32,
+                   "frontend": (B, F, D) bf16 (vlm/audio only)}
+  decode        : serve_step(params, cache, token (B,1) i32, pos scalar)
+
+``[audio]``/``[vlm]`` frontends are STUBS per the task spec: ``input_specs``
+provides precomputed frame/patch embeddings; the backbone is real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.layers import ACC, embed_init, embed_lookup, matmul, rms_norm, rms_norm_init
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params --
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, 8)
+        params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+        params["decoder"] = {
+            "groups": [tf.group_init(k, g, cfg, dtype)
+                       for k, g in zip(jax.random.split(keys[1], 8),
+                                       cfg.decoder_program())],
+            "final_norm": rms_norm_init(cfg.d_model, dtype),
+        }
+        if cfg.is_encdec:
+            params["encoder"] = {
+                "groups": [tf.group_init(k, g, cfg, dtype)
+                           for k, g in zip(jax.random.split(keys[2], 8),
+                                           cfg.encoder_program())],
+                "final_norm": rms_norm_init(cfg.d_model, dtype),
+            }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(keys[3], cfg.vocab_size,
+                                           cfg.d_model, dtype).T
+        return params
+
+    # ------------------------------------------------------------ helpers --
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["decoder"]["final_norm"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return jnp.matmul(x, w, preferred_element_type=ACC)  # logits fp32
+
+    def _encode(self, params, frontend):
+        cfg = self.cfg
+        x = frontend
+        for g, gp in zip(cfg.encoder_program(), params["encoder"]["groups"]):
+            x, _ = tf.group_apply(gp, x, g, cfg)
+        return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def _decoder_input(self, params, batch):
+        """Token embeddings, with the VLM patch prefix concatenated."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], batch["tokens"])
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+        return x
+
+    # ------------------------------------------------------------ forward --
+    def forward(self, params, batch, remat: str = "none"):
+        """Full-sequence logits (training / prefill-style). Returns
+        (logits, aux_loss)."""
+        cfg = self.cfg
+        memory = None
+        if cfg.is_encdec:
+            memory = self._encode(params, batch["frontend"].astype(
+                jnp.dtype(cfg.dtype)))
+        x = self._decoder_input(params, batch)
+        aux = jnp.zeros((), ACC)
+        for g, gp in zip(cfg.decoder_program(), params["decoder"]["groups"]):
+            x, a = tf.group_apply(gp, x, g, cfg, memory=memory, remat=remat)
+            aux = aux + a
+        return self._head(params, x), aux
+
+    def loss(self, params, batch, remat: str = "none"):
+        """Next-token cross entropy (fp32), MoE aux added; returns
+        (loss, metrics_dict)."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat)
+        if cfg.family == "vlm":   # loss only on the text segment
+            logits = logits[:, batch["frontend"].shape[1]:]
+        labels = batch["labels"]
+        logits = logits[:, :-1]
+        targets = labels[:, 1:]
+        mask = (targets >= 0).astype(ACC)
+        logp = jax.nn.log_softmax(logits.astype(ACC), axis=-1)
+        ll = jnp.take_along_axis(
+            logp, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        ce = -(ll * mask).sum() / ntok
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}
+
+    # ------------------------------------------------------------ serving --
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        mem_len = cfg.frontend_len if cfg.is_encdec else 0
+        return [tf.group_init_cache(g, cfg, batch_size, cache_len, dtype,
+                                    memory_len=mem_len)
+                for g in cfg.decoder_program()]
+
+    def prefill(self, params, batch, cache_len: int):
+        """Process the prompt; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        memory = None
+        if cfg.is_encdec:
+            memory = self._encode(params, batch["frontend"].astype(
+                jnp.dtype(cfg.dtype)))
+        x = self._decoder_input(params, batch)
+        caches = []
+        for g, gp in zip(cfg.decoder_program(), params["decoder"]["groups"]):
+            x, c = tf.group_prefill(gp, x, g, cfg, cache_len, memory=memory)
+            caches.append(c)
+        logits = self._head(params, x[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, caches, token, pos):
+        """One-token serve step: token (B,1) i32, pos scalar i32.
+        Returns (logits (B,1,V) fp32, new caches)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], token)
+        new_caches = []
+        for g, gp, c in zip(cfg.decoder_program(),
+                            params["decoder"]["groups"], caches):
+            x, nc = tf.group_decode(gp, x, g, cfg, c, pos)
+            new_caches.append(nc)
+        return self._head(params, x), new_caches
+
+    # --------------------------------------------------------- dry-run IO --
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell —
+        weak-type-correct, shardable, no device allocation."""
+        cfg = self.cfg
+        B, L = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        f32 = jnp.float32
+        sds = jax.ShapeDtypeStruct
+        if shape.mode in ("train", "prefill"):
+            text_len = L - cfg.frontend_len if cfg.family == "vlm" else L
+            batch = {"tokens": sds((B, text_len), jnp.int32),
+                     "labels": sds((B, text_len), jnp.int32)}
+            if cfg.family == "vlm":
+                batch["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), dt)
+            if cfg.is_encdec:
+                batch["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), dt)
+            return batch
+        # decode: one token against a cache of length L
+        caches = jax.eval_shape(lambda: self.init_cache(B, L))
+        return {"token": sds((B, 1), jnp.int32),
+                "pos": sds((), jnp.int32),
+                "caches": caches}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

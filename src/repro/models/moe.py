@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN with top-k routing (qwen3-moe, moonshot, jamba).
+
+TPU-native dense dispatch (GShard/Switch style): tokens are routed into a
+capacity-bounded (E, C, D) expert batch with one-hot einsums — no
+gather/scatter, lowers cleanly under GSPMD to all-to-alls when experts are
+sharded over the `model` mesh axis (expert parallelism). Router math in
+fp32; aux load-balancing loss returned for the train loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACC, dense_init, matmul
+
+
+def moe_init(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], d, e, dtype, scale=0.02),
+        "we_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * d ** -0.5).astype(dtype),
+        "we_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * d ** -0.5).astype(dtype),
+        "we_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * f ** -0.5).astype(dtype),
+    }
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, L, D) → (B, L, D), aux-loss scalar (fp32).
+
+    Dispatch grouping (beyond-paper optimization, see EXPERIMENTS.md §Perf):
+    with a single dispatch group the (T, E, C) one-hot einsums cost
+    T·E·C·D with C ∝ T — *quadratic* in tokens (at prefill_32k this is
+    ~1000× the useful expert FLOPs). ``moe_group_size`` splits tokens into
+    G independent dispatch groups (GShard's standard device-grouping),
+    making dispatch linear in group size. 0 = ungrouped baseline."""
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * L
+    g_sz = getattr(cfg, "moe_group_size", 0) or T
+    if T % g_sz:
+        g_sz = T
+    if g_sz != T:
+        xg = x.reshape(T // g_sz, 1, g_sz, D)
+        outs, auxes = jax.vmap(
+            lambda xx: _moe_dispatch(p, xx, cfg))(xg)
+        return outs.reshape(B, L, D), jnp.mean(auxes)
+    out, aux = _moe_dispatch(p, x.reshape(1, T, D), cfg)
+    return out.reshape(B, L, D), aux
+
+
+def _moe_dispatch(p, x, cfg):
+    """Capacity-bounded top-k dispatch over one token group."""
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * L
+    xt = x.reshape(T, D)
+
+    logits = matmul(xt, p["router"]).astype(ACC)           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # capacity per expert (static): C = ceil(T·K/E · cf)
+    C = max(int(T * K / E * cfg.capacity_factor), 1)
+    onehot = jax.nn.one_hot(idx, E, dtype=ACC)             # (T, K, E)
+    # position of each (token, slot) within its expert's capacity buffer
+    pos = jnp.cumsum(onehot.reshape(T * K, E), axis=0).reshape(T, K, E) - 1.0
+    pos = jnp.sum(pos * onehot, axis=-1)                   # (T, K)
+    keep = pos < C
+    gate_vals = gate_vals * keep                            # drop overflow
+
+    # dispatch/combine tensors (T, E, C)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=ACC) * keep[..., None]
+    dispatch = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+    combine = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, gate_vals)
+
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), xt,
+                    preferred_element_type=ACC).astype(x.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["we_gate"],
+                   preferred_element_type=ACC)
+    u = jnp.einsum("ecd,edf->ecf", xe, p["we_up"],
+                   preferred_element_type=ACC)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_down"],
+                    preferred_element_type=ACC).astype(x.dtype)
+    yt = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye,
+                    preferred_element_type=ACC).astype(x.dtype)
+
+    # GShard aux loss: E · Σ_e fraction_tokens_e · mean_router_prob_e
+    frac = jnp.mean(jnp.sum(jax.nn.one_hot(idx[:, 0], E, dtype=ACC), axis=0)
+                    / T)
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.sum(jax.nn.one_hot(idx, E, dtype=ACC), axis=(0, 1)) / (T * K)
+    aux = E * jnp.sum(fe * me)
+    del frac
+    return yt.reshape(B, L, D), aux
+
+
+def moe_decode_apply(p, x, cfg):
+    """Alias used by the decode path (same capacity dispatch)."""
+    return moe_apply(p, x, cfg)

@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+TPU adaptation (DESIGN.md §3): the reference CUDA WKV6 kernel is a fused
+sequential recurrence over tokens; here we use the *chunked linear-attention
+form* (GLA-style): within a chunk of C tokens the pairwise decay matrix
+P[i,j] = exp(cum[i] − cum[j+1]) (always ≤ 1 ⇒ numerically safe — we never
+divide by decays) yields an O(C²) intra term, while a (dk × dv) state per
+head carries history across chunks. Sequential oracle in tests asserts
+allclose. Decode is O(1)/token via the state recurrence.
+
+Simplifications vs the released model (noted in DESIGN.md): static
+token-shift mix coefficients for r/k/v/g (RWKV6 uses data-dependent LoRA
+lerps for these too); the *decay* keeps its data-dependent LoRA — that is
+the defining Finch feature the paper pool cites ("data-dependent decay").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACC, dense_init, matmul
+
+W_LORA = 64
+
+
+def rwkv_tmix_init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    h = d // cfg.rwkv_head_dim
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "w0": jnp.full((d,), -2.0, dtype),            # base decay (pre-softplus-ish)
+        "w_a": dense_init(ks[1], d, W_LORA, dtype, scale=0.01),
+        "w_b": dense_init(ks[2], W_LORA, d, dtype, scale=0.01),
+        "wr": dense_init(ks[3], d, d, dtype),
+        "wk": dense_init(ks[4], d, d, dtype),
+        "wv": dense_init(ks[5], d, d, dtype),
+        "wg": dense_init(ks[6], d, d, dtype),
+        "wo": dense_init(ks[7], d, d, dtype),
+        "u": (jax.random.normal(ks[8], (h, cfg.rwkv_head_dim), jnp.float32)
+              * 0.1).astype(dtype),
+        "ln_scale": jnp.ones((d,), dtype),            # per-head group norm scale
+    }
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with zero (or carried) left pad. x: (B, L, D)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _tmix_inputs(p, x, cfg, last_x=None):
+    B, L, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    xprev = _token_shift(x, last_x)
+    mu = p["mu"].astype(ACC)
+
+    def mix(i):
+        m = mu[i][None, None]
+        return (x.astype(ACC) * (1 - m) + xprev.astype(ACC) * m).astype(x.dtype)
+
+    r = matmul(mix(0), p["wr"]).reshape(B, L, H, hd)
+    k = matmul(mix(1), p["wk"]).reshape(B, L, H, hd)
+    v = matmul(mix(2), p["wv"]).reshape(B, L, H, hd)
+    g = matmul(mix(3), p["wg"])
+    # data-dependent decay (the Finch signature): w ∈ (0,1)
+    lora = matmul(jnp.tanh(matmul(mix(4), p["w_a"]).astype(ACC)).astype(x.dtype),
+                  p["w_b"]).astype(ACC)
+    ww = p["w0"].astype(ACC) + lora
+    logw = -jnp.exp(jnp.clip(ww, -10.0, 4.0))         # log-decay ≤ 0
+    logw = jnp.clip(logw, -20.0, -1e-4).reshape(B, L, H, hd)
+    return r.astype(ACC), k.astype(ACC), v.astype(ACC), g, logw, x[:, -1]
+
+
+def _out_proj(p, wkv, g, cfg, x_dtype):
+    B, L = wkv.shape[:2]
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    # per-head group norm
+    mean = jnp.mean(wkv, -1, keepdims=True)
+    var = jnp.var(wkv, -1, keepdims=True)
+    wkv = (wkv - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = wkv.reshape(B, L, d) * p["ln_scale"].astype(ACC)
+    out = out * jax.nn.silu(g.astype(ACC))
+    return matmul(out.astype(x_dtype), p["wo"])
+
+
+def rwkv_tmix_apply(p, x, cfg, chunk=None):
+    """Chunked-parallel WKV6. x: (B, L, D) → (B, L, D)."""
+    B, L, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    C = min(chunk or cfg.rwkv_chunk, L)
+    assert L % C == 0, (L, C)
+    nc = L // C
+    r, k, v, g, logw, _ = _tmix_inputs(p, x, cfg)
+    u = p["u"].astype(ACC)                            # (H, hd)
+
+    def to_chunks(t):  # (B, L, H, hd) -> (nc, B, C, H, hd)
+        return t.reshape(B, nc, C, H, hd).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
+
+    def chunk_body(S, inp):
+        rk, kk, vk, lw = inp                          # (B, C, H, hd)
+        cum = jnp.cumsum(lw, axis=1)                  # Σ_{s≤i} logw_s
+        cum_in = cum - lw                             # Σ_{s<i}  (exclusive)
+        # inter-chunk: o_i += (r_i ⊙ exp(cum_in_i))ᵀ S_prev
+        q_t = rk * jnp.exp(cum_in)
+        inter = jnp.einsum("bchd,bhde->bche", q_t, S)
+        # intra-chunk: A[i,j] = Σ_d r_i k_j exp(cum_in_i − cum_j)   (j < i)
+        pair = cum_in[:, :, None] - cum[:, None, :, :, :]   # (B,C,C,H,hd) ≤ 0 for j<i
+        pair = jnp.exp(jnp.minimum(pair, 0.0))
+        scores = jnp.einsum("bihd,bjhd,bijhd->bijh", rk, kk, pair)
+        mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+        scores = scores * mask[None, :, :, None]
+        # diagonal bonus term: (r_i ⊙ u) · k_i
+        diag = jnp.einsum("bihd,hd,bihd->bih", rk, u, kk)
+        intra = jnp.einsum("bijh,bjhe->bihe", scores, vk) + \
+            diag[..., None] * vk
+        # state update: S' = exp(cum_C)⊙S + Σ_j exp(cum_C − cum_j) k_j v_jᵀ
+        decay_all = jnp.exp(cum[:, -1])               # (B, H, hd)
+        k_hat = kk * jnp.exp(cum[:, -1][:, None] - cum)
+        S_new = decay_all[..., None] * S + jnp.einsum("bjhd,bjhe->bhde", k_hat, vk)
+        return S_new, inter + intra
+
+    S0 = jnp.zeros((B, H, hd, hd), ACC)
+    _, o = jax.lax.scan(chunk_body, S0, (rc, kc, vc, wc))
+    o = o.swapaxes(0, 1).reshape(B, L, H, hd)
+    return _out_proj(p, o, g, cfg, x.dtype)
+
+
+def rwkv_tmix_decode(p, x, cfg, state):
+    """O(1) decode. state: {"S": (B,H,hd,hd), "last_x": (B,D)}."""
+    r, k, v, g, logw, last = _tmix_inputs(p, x, cfg, last_x=state["last_x"])
+    u = p["u"].astype(ACC)
+    S = state["S"]
+    rk, kk, vk = r[:, 0], k[:, 0], v[:, 0]            # (B, H, hd)
+    o = jnp.einsum("bhd,bhde->bhe", rk, S) + \
+        jnp.einsum("bhd,hd,bhd->bh", rk, u, kk)[..., None] * vk
+    w = jnp.exp(logw[:, 0])                           # (B, H, hd)
+    S_new = w[..., None] * S + kk[..., None] * vk[:, :, None, :]
+    out = _out_proj(p, o[:, None], g, cfg, x.dtype)
+    return out, {"S": S_new, "last_x": x[:, -1]}
+
+
+def rwkv_tmix_init_state(cfg, batch, dtype):
+    hd = cfg.rwkv_head_dim
+    H = cfg.d_model // hd
+    return {"S": jnp.zeros((batch, H, hd, hd), ACC),
+            "last_x": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+# ------------------------------------------------------------ channel mix --
+def rwkv_cmix_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"mu": (jax.random.uniform(ks[0], (2, d), jnp.float32)).astype(dtype),
+            "wk": dense_init(ks[1], d, f, dtype),
+            "wv": dense_init(ks[2], f, d, dtype),
+            "wr": dense_init(ks[3], d, d, dtype)}
+
+
+def rwkv_cmix_apply(p, x, cfg, last_x=None):
+    xprev = _token_shift(x, last_x)
+    mu = p["mu"].astype(ACC)
+    xk = (x.astype(ACC) * (1 - mu[0]) + xprev.astype(ACC) * mu[0]).astype(x.dtype)
+    xr = (x.astype(ACC) * (1 - mu[1]) + xprev.astype(ACC) * mu[1]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(matmul(xk, p["wk"]).astype(ACC))).astype(x.dtype)
+    return (jax.nn.sigmoid(matmul(xr, p["wr"]).astype(ACC))
+            * matmul(k, p["wv"]).astype(ACC)).astype(x.dtype)
+
+
+def rwkv_cmix_decode(p, x, cfg, state):
+    out = rwkv_cmix_apply(p, x, cfg, last_x=state["last_x"])
+    return out, {"last_x": x[:, -1]}
+
+
+def rwkv_tmix_reference(p, x, cfg):
+    """Sequential oracle (tests only)."""
+    B, L, D = x.shape
+    state = rwkv_tmix_init_state(cfg, B, x.dtype)
+    outs = []
+    for t in range(L):
+        o, state = rwkv_tmix_decode(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

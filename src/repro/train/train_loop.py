@@ -1,0 +1,125 @@
+"""Training loop: Collage-precision train_step with microbatched gradient
+accumulation, remat, optional compressed gradient all-reduce, metrics.
+
+The step function is pure (TrainState → TrainState) and jit/pjit-friendly —
+the same function is used by the CPU examples, the distributed launcher and
+the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collage import CollageAdamW, CollageOptState, StepMetrics
+from repro.distributed import compression
+from repro.models.model import Model
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: CollageOptState
+    grad_err: Optional[Any]          # error-feedback residual (compression)
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.grad_err), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(model: Model, opt: CollageAdamW, key,
+               grad_compression: str = "none") -> TrainState:
+    params = model.init(key)
+    opt_state = opt.init(params)
+    err = compression.init_error_state(params) \
+        if grad_compression.endswith("_ef") else None
+    return TrainState(params, opt_state, err)
+
+
+def make_train_step(model: Model, opt: CollageAdamW, *,
+                    microbatch: int = 0, remat: str = "none",
+                    grad_compression: str = "none",
+                    psum_axis: Optional[str] = None) -> Callable:
+    """Build the pure train_step(state, batch) → (state, metrics).
+
+    microbatch > 0: split the (local) batch into chunks of that many rows and
+    accumulate grads in fp32 with a lax.scan (bounded activation memory —
+    the paper's Table 8 trade-off).
+    psum_axis: when run under shard_map (pipeline/compression paths), the
+    named axis to psum gradients over; under plain pjit GSPMD inserts the
+    reduction automatically and this stays None.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def accum_grads(params, batch):
+        pre_chunked = batch["tokens"].ndim == 3  # loader-side (n, mb, L):
+        # avoids a GSPMD reshape of the dp-sharded batch dim (resharding
+        # all-to-all) — the distributed path always uses this form.
+        if not microbatch and not pre_chunked:
+            return grads_of(params, batch)
+        if pre_chunked:
+            n = batch["tokens"].shape[0]
+            chunks = batch
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % microbatch == 0, (B, microbatch)
+            n = B // microbatch
+            chunks = jax.tree_util.tree_map(
+                lambda x: x.reshape((n, microbatch) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, _, grads = grads_of(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), chunks)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g / n).astype(p.dtype), gsum, params)
+        loss = loss_sum / n
+        return loss, {"ce": loss, "aux": jnp.zeros(()), "ppl": jnp.exp(loss)}, grads
+
+    def train_step(state: TrainState, batch):
+        loss, lmetrics, grads = accum_grads(state.params, batch)
+        grad_err = state.grad_err
+        if grad_compression.startswith("bf16"):
+            grads, grad_err = compression.compress_tree(
+                grads, grad_err if grad_compression.endswith("_ef") else None,
+                jnp.bfloat16)
+            if not grad_compression.endswith("_ef"):
+                grad_err = state.grad_err
+        if psum_axis is not None:
+            grads = jax.lax.pmean(grads, psum_axis)
+        params, opt_state, ometrics = opt.step(grads, state.params,
+                                               state.opt_state)
+        metrics = {"loss": loss, **lmetrics,
+                   "edq": ometrics.edq, "update_norm": ometrics.update_norm,
+                   "imprecision_pct": ometrics.imprecision_pct,
+                   "grad_norm": ometrics.grad_norm}
+        return TrainState(params, opt_state, grad_err), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics
+    return eval_step

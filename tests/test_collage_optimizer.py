@@ -1,0 +1,260 @@
+"""Collage optimizer behaviour: trajectory fidelity vs fp64 oracle, strategy
+ordering, state dtypes/bytes-per-param (Paper Table 2), Kahan equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mcf
+from repro.core.collage import CollageAdamW, cosine_schedule
+from repro.core.mcf import Expansion
+from repro.core.precision import BYTES_PER_PARAM, PrecisionPolicy, Strategy
+
+
+def _opt(strategy, lr=1e-3, b2=0.999, wd=0.0, **kw):
+    return CollageAdamW(lr, b2=b2, weight_decay=wd,
+                        policy=PrecisionPolicy(strategy=strategy),
+                        compute_metrics=True, **kw)
+
+
+def _adamw_f64_oracle(grads_seq, theta0, lr=1e-3, b1=0.9, b2=0.999,
+                      eps=1e-8, wd=0.0):
+    theta = np.asarray(theta0, np.float64)
+    m = np.zeros_like(theta)
+    v = np.zeros_like(theta)
+    for t, g in enumerate(grads_seq, start=1):
+        g = np.asarray(g, np.float64)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / (1 - b1 ** t), v / (1 - b2 ** t)
+        theta = theta + (-lr) * (mh / (np.sqrt(vh) + eps) + wd * theta)
+    return theta
+
+
+def _run(strategy, grads_seq, theta0, **kw):
+    opt = _opt(strategy, **kw)
+    params = {"w": theta0}
+    state = opt.init(params)
+    step = jax.jit(opt.step)
+    metrics = None
+    for g in grads_seq:
+        params, state, metrics = step({"w": g}, params, state)
+    return params, state, metrics, opt
+
+
+def _grad_seq(n_steps=200, shape=(512,), scale=1e-3, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_steps)
+    return [(jax.random.normal(k, shape, dtype=jnp.float32) * scale
+             ).astype(jnp.bfloat16) for k in keys]
+
+
+class TestTrajectoryFidelity:
+    """Collage-plus must track the fp64 AdamW trajectory ~as well as fp32-MW
+    (option D) and far better than plain bf16 (option A). Theta is large
+    (~200) with tiny updates — the paper's lost-arithmetic regime (§3.1)."""
+
+    def setup_method(self):
+        self.theta0 = jnp.full((512,), 200.0, jnp.bfloat16)
+        self.grads = _grad_seq(150)
+        self.oracle = _adamw_f64_oracle(self.grads, self.theta0)
+
+    def _err(self, strategy):
+        params, state, _, _ = _run(strategy, self.grads, self.theta0)
+        got = np.asarray(params["w"], np.float64)
+        if state.delta is not None and strategy.uses_expansion_params:
+            got = got + np.asarray(state.delta["w"], np.float64)
+        return np.abs(got - self.oracle).mean()
+
+    def test_ordering(self):
+        err_a = self._err(Strategy.A_BF16)
+        err_b = self._err(Strategy.B_COLLAGE_LIGHT)
+        err_c = self._err(Strategy.C_COLLAGE_PLUS)
+        err_d = self._err(Strategy.D_MIXED_MW)
+        err_dmw = self._err(Strategy.D_MINUS_MW)
+        # A catastrophically loses updates (θ=200 ⇒ ulp=1 ≫ lr·steps)
+        assert err_a > 20 * err_c, (err_a, err_c)
+        # in this frozen-θ regime D⁻ᴹᵂ also loses every θ update (== A);
+        # light strictly improves (it fixes the θ update step)
+        assert err_b < err_a and err_dmw <= err_a
+        # plus ≈ D: both within small multiple of each other
+        assert err_c < 5 * max(err_d, 1e-7), (err_c, err_d)
+
+    def test_option_a_frozen_params(self):
+        """θ=200, per-step |Δθ|~lr ⇒ ulp(200)/2=0.5 ≫ Δθ: A never updates."""
+        params, _, metrics, _ = _run(Strategy.A_BF16, self.grads, self.theta0)
+        assert np.array_equal(np.asarray(params["w"]), np.asarray(self.theta0))
+        assert float(metrics.imprecision_pct) == 100.0
+        assert float(metrics.edq) <= 1e-6
+
+    def test_collage_light_edq_full(self):
+        _, _, metrics, _ = _run(Strategy.B_COLLAGE_LIGHT, self.grads, self.theta0)
+        # EDQ ≈ ‖Δθ‖ when nothing is lost (Def. 3.3 discussion)
+        assert float(metrics.edq) > 0.7 * float(metrics.update_norm)
+        # a length-2 bf16 expansion has ~16 effective significand bits: at
+        # θ=200 updates below ~2⁻¹⁶·256 are still lost — but rarely, and
+        # only the quadratically-small tail (vs 100% for option A).
+        assert float(metrics.imprecision_pct) < 20.0
+
+
+class TestBeta2Expansion:
+    """β₂=0.999 rounds to 1.0 in bf16 ⇒ option A/B second moment grows
+    monotonically (Paper §4.2); plus fixes it via MCF expansions."""
+
+    def test_v_never_decays_in_light(self):
+        """Crisp discriminator: 100 steps of large g then 400 of g=0.
+        True EMA decays by 0.999^400 ≈ 0.67×; with β₂→bf16→1.0 (light) the
+        second moment stays EXACTLY constant — the paper's monotonicity."""
+        grads = _grad_seq(100, scale=1.0, seed=1) + \
+            [jnp.zeros((512,), jnp.bfloat16)] * 400
+        theta0 = jnp.zeros((512,), jnp.bfloat16)
+        _, state_b, _, _ = _run(Strategy.B_COLLAGE_LIGHT, grads, theta0)
+        _, state_c, _, _ = _run(Strategy.C_COLLAGE_PLUS, grads, theta0)
+        _, state_d, _, _ = _run(Strategy.D_MIXED_MW, grads, theta0)
+        v_b = np.asarray(state_b.v["w"], np.float64).mean()
+        v_c = np.asarray(state_c.v["w"].value(jnp.float32), np.float64).mean()
+        v_d = np.asarray(state_d.v["w"], np.float64).mean()
+        # light froze at its 100-step value: no decay at all
+        assert v_b > 1.4 * v_d, (v_b, v_d)
+        # plus tracks the fp32 EMA closely (incl. the decay phase)
+        assert abs(v_c - v_d) / v_d < 0.05, (v_c, v_d)
+
+    def test_beta2_098_light_suffices(self):
+        """RoBERTa finding (Table 3): with β₂=0.98 light ≈ plus ≈ D."""
+        grads = _grad_seq(200, scale=1.0, seed=2)
+        theta0 = jnp.zeros((512,), jnp.bfloat16)
+        _, sb, _, _ = _run(Strategy.B_COLLAGE_LIGHT, grads, theta0, b2=0.98)
+        _, sd, _, _ = _run(Strategy.D_MIXED_MW, grads, theta0, b2=0.98)
+        v_b = np.asarray(sb.v["w"], np.float64).mean()
+        v_d = np.asarray(sd.v["w"], np.float64).mean()
+        assert abs(v_b - v_d) / v_d < 0.15, (v_b, v_d)
+
+
+class TestStateLayout:
+    def test_dtypes_and_bytes_per_param(self):
+        params = {"w": jnp.zeros((64, 32), jnp.bfloat16),
+                  "b": jnp.zeros((32,), jnp.bfloat16)}
+        n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+        for strat, want_bytes in BYTES_PER_PARAM.items():
+            opt = _opt(strat)
+            state = opt.init(params)
+            total = sum(x.size * x.dtype.itemsize
+                        for x in jax.tree_util.tree_leaves(
+                            (params, state.m, state.v, state.delta, state.master))
+                        if x is not None and hasattr(x, "dtype") and x.ndim > 0)
+            total += 2 * n  # gradients (bf16), not materialized in state
+            assert total == want_bytes * n, (strat, total / n, want_bytes)
+
+    def test_expansion_leaves(self):
+        params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+        state = _opt(Strategy.C_COLLAGE_PLUS).init(params)
+        assert isinstance(state.v["w"], Expansion)
+        assert state.v["w"].hi.dtype == jnp.bfloat16
+        assert state.delta["w"].dtype == jnp.bfloat16
+        state_d = _opt(Strategy.D_MIXED_MW).init(params)
+        assert state_d.m["w"].dtype == jnp.float32
+        assert state_d.master["w"].dtype == jnp.float32
+
+
+class TestKahanEquivalence:
+    """App. D: Kahan-sum optimizer is a special case of Collage-light."""
+
+    def test_close_trajectories(self):
+        theta0 = jnp.full((256,), 50.0, jnp.bfloat16)
+        grads = _grad_seq(100, shape=(256,), seed=3)
+        pk, sk, _, _ = _run(Strategy.KAHAN, grads, theta0)
+        pl, sl, _, _ = _run(Strategy.B_COLLAGE_LIGHT, grads, theta0)
+        tk = np.asarray(pk["w"], np.float64) + np.asarray(sk.delta["w"], np.float64)
+        tl = np.asarray(pl["w"], np.float64) + np.asarray(sl.delta["w"], np.float64)
+        oracle = _adamw_f64_oracle(grads, theta0)
+        ek = np.abs(tk - oracle).mean()
+        el = np.abs(tl - oracle).mean()
+        assert ek < 1e-3 and el < 1e-3, (ek, el)
+
+
+class TestWeightDecay:
+    def test_pytorch_decay_lost_in_bf16(self):
+        """App. D: αλ=1.2e-5 < ulp(1)/2=2^-8 ⇒ separate decay is a no-op."""
+        theta0 = jnp.ones((64,), jnp.bfloat16)
+        g = [jnp.zeros((64,), jnp.bfloat16)] * 5
+        pol = PrecisionPolicy(strategy=Strategy.A_BF16, wd_mode="pytorch")
+        opt = CollageAdamW(1.2e-4, weight_decay=0.1, policy=pol)
+        params, state = {"w": theta0}, None
+        state = opt.init(params)
+        for gg in g:
+            params, state, _ = opt.step({"w": gg}, params, state)
+        assert np.array_equal(np.asarray(params["w"]), np.asarray(theta0))
+
+    def test_fused_decay_applies(self):
+        theta0 = jnp.ones((64,), jnp.bfloat16)
+        g = [jnp.zeros((64,), jnp.bfloat16)] * 5
+        opt = _opt(Strategy.C_COLLAGE_PLUS, lr=1.2e-4, wd=0.1)
+        params = {"w": theta0}
+        state = opt.init(params)
+        for gg in g:
+            params, state, _ = opt.step({"w": gg}, params, state)
+        val = np.asarray(params["w"], np.float64) + np.asarray(state.delta["w"], np.float64)
+        want = 1.0 * (1 - 1.2e-5) ** 5
+        np.testing.assert_allclose(val, want, rtol=1e-4)
+
+
+class TestStochasticRounding:
+    def test_sr_updates_in_expectation(self):
+        theta0 = jnp.full((4096,), 200.0, jnp.bfloat16)
+        grads = _grad_seq(50, shape=(4096,), seed=4, scale=1e-2)
+        params, _, _, _ = _run(Strategy.SR, grads, theta0)
+        # SR must move parameters (unlike frozen option A)
+        assert not np.array_equal(np.asarray(params["w"]), np.asarray(theta0))
+
+
+def test_cosine_schedule():
+    sched = cosine_schedule(6e-4, warmup=200, total=2000)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.asarray(200))), 6e-4, rtol=1e-5)
+    assert float(sched(jnp.asarray(2000))) < 6.1e-5 * 1.05
+    assert float(sched(jnp.asarray(100))) == pytest.approx(3e-4, rel=1e-5)
+
+
+class TestStateConversion:
+    """convert_state: checkpoint-time precision migration (D ↔ Collage)."""
+
+    def test_d_to_plus_preserves_master_residual(self):
+        theta0 = jnp.full((256,), 100.0, jnp.bfloat16)
+        grads = _grad_seq(50, shape=(256,), seed=7)
+        pd, sd, _, _ = _run(Strategy.D_MIXED_MW, grads, theta0)
+        from repro.core.collage import convert_state
+        pol = PrecisionPolicy(strategy=Strategy.C_COLLAGE_PLUS)
+        sc = convert_state(sd, pd, pol)
+        # master value must be preserved: θ + δθ ≈ master (bf16 residual)
+        recon = np.asarray(pd["w"], np.float64) + np.asarray(sc.delta["w"], np.float64)
+        master = np.asarray(sd.master["w"], np.float64)
+        assert np.abs(recon - master).max() < 1e-3
+        assert isinstance(sc.v["w"], mcf.Expansion)
+        # v expansion must reproduce the fp32 value to ~bf16² precision
+        v_err = np.abs(np.asarray(sc.v["w"].value(jnp.float32), np.float64)
+                       - np.asarray(sd.v["w"], np.float64))
+        assert v_err.max() < np.abs(np.asarray(sd.v["w"])).max() * 2 ** -13
+
+    def test_plus_to_d_builds_master(self):
+        theta0 = jnp.full((256,), 100.0, jnp.bfloat16)
+        grads = _grad_seq(50, shape=(256,), seed=8)
+        pc, sc, _, _ = _run(Strategy.C_COLLAGE_PLUS, grads, theta0)
+        from repro.core.collage import convert_state
+        pol = PrecisionPolicy(strategy=Strategy.D_MIXED_MW)
+        sd = convert_state(sc, pc, pol)
+        want = np.asarray(pc["w"], np.float64) + np.asarray(sc.delta["w"], np.float64)
+        got = np.asarray(sd.master["w"], np.float64)
+        assert np.abs(got - want).max() < 1e-4
+        assert sd.m["w"].dtype == jnp.float32
+
+    def test_roundtrip_continues_training(self):
+        theta0 = jnp.full((128,), 50.0, jnp.bfloat16)
+        grads = _grad_seq(30, shape=(128,), seed=9)
+        pd, sd, _, optd = _run(Strategy.D_MIXED_MW, grads, theta0)
+        from repro.core.collage import convert_state
+        pol = PrecisionPolicy(strategy=Strategy.C_COLLAGE_PLUS)
+        opt_c = CollageAdamW(1e-3, b2=0.999, policy=pol, compute_metrics=True)
+        state_c = convert_state(sd, pd, pol)
+        p, s = pd, state_c
+        for g in _grad_seq(20, shape=(128,), seed=10):
+            p, s, _ = opt_c.step({"w": g}, p, s)
+        assert np.isfinite(np.asarray(p["w"], np.float32)).all()

@@ -1,0 +1,198 @@
+"""Distributed correctness on 8 virtual host devices (subprocess — the main
+test process keeps a single device per task constraints):
+
+  * pjit FSDP×TP train step ≡ single-device step (numerics)
+  * GPipe pipeline over a mesh axis ≡ unpipelined stack (fwd + grad)
+  * compressed gradient all-reduce: bf16 payload on the wire + error
+    feedback keeps long-run drift bounded
+  * context-parallel decode (cache length sharded) ≡ replicated decode
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devs(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_pjit_train_step_matches_single_device():
+    run_devs("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core.collage import CollageAdamW
+        from repro.core.precision import PrecisionPolicy, Strategy
+        from repro.data.synthetic import make_batch_fn
+        from repro.configs.base import ShapeConfig
+        from repro.distributed import sharding as shard_lib
+        from repro.models.model import build_model
+        from repro.train import train_loop
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        model = build_model(cfg)
+        opt = CollageAdamW(1e-3, b2=0.95,
+                           policy=PrecisionPolicy(strategy=Strategy.C_COLLAGE_PLUS))
+        shape = ShapeConfig("t", 32, 8, "train")
+        batch_fn = make_batch_fn(cfg, shape)
+        step = train_loop.make_train_step(model, opt)
+
+        # single-device reference
+        state0 = train_loop.init_state(model, opt, jax.random.PRNGKey(0))
+        sref, mref = jax.jit(step)(state0, batch_fn(0))
+
+        # pjit on (data=2, model=4)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        state_abs = jax.eval_shape(
+            lambda: train_loop.init_state(model, opt, jax.random.PRNGKey(0)))
+        st_sh = shard_lib.state_shardings(state_abs, mesh)
+        b_sh = shard_lib.batch_shardings(jax.eval_shape(lambda: batch_fn(0)), mesh)
+        with mesh:
+            jstep = jax.jit(step, in_shardings=(st_sh, b_sh),
+                            out_shardings=(st_sh, None))
+            state = jax.device_put(state0, st_sh)
+            batch = jax.device_put(batch_fn(0), b_sh)
+            s2, m2 = jstep(state, batch)
+        np.testing.assert_allclose(float(mref["loss"]), float(m2["loss"]),
+                                   rtol=2e-2)
+        # parameters must match elementwise (bf16-exact ops dominate)
+        for a, b in zip(jax.tree_util.tree_leaves(sref.params),
+                        jax.tree_util.tree_leaves(s2.params)):
+            aa = np.asarray(a, np.float32); bb = np.asarray(b, np.float32)
+            assert (np.abs(aa - bb) <= 2e-2 * np.maximum(np.abs(aa), 1)).mean() > 0.99
+        print("PJIT_OK")
+    """)
+
+
+def test_pipeline_matches_sequential():
+    run_devs("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import pipeline as pp
+
+        mesh = jax.make_mesh((4,), ("pod",))
+        L, D, n_micro, mb = 8, 16, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        params = {"w": jax.random.normal(ks[0], (L, D, D), jnp.float32) * 0.1}
+        x = jax.random.normal(ks[1], (n_micro, mb, D), jnp.float32)
+
+        def layer(w, h):
+            return jnp.tanh(h @ w)
+
+        def stage_body(stage_params, h):
+            def body(h, w):
+                return layer(w, h), None
+            h, _ = jax.lax.scan(body, h, stage_params["w"])
+            return h
+
+        def sequential(params, x):
+            def body(h, w):
+                return layer(w, h), None
+            flat = x.reshape(n_micro * mb, D)
+            h, _ = jax.lax.scan(body, flat, params["w"])
+            return h.reshape(n_micro, mb, D)
+
+        staged = pp.split_stages(params, 4)
+        with mesh:
+            got = pp.pipeline_apply(stage_body, staged, x, mesh=mesh, axis="pod")
+        want = sequential(params, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+        # differentiability: d(loss)/d(params) matches
+        def loss_pipe(staged):
+            with mesh:
+                o = pp.pipeline_apply(stage_body, staged, x, mesh=mesh, axis="pod")
+            return jnp.sum(o ** 2)
+        def loss_seq(params):
+            return jnp.sum(sequential(params, x) ** 2)
+        g_pipe = jax.grad(loss_pipe)(staged)["w"].reshape(L, D, D)
+        g_seq = jax.grad(loss_seq)(params)["w"]
+        np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                                   rtol=1e-4, atol=1e-4)
+        print("PIPE_OK", float(pp.pipeline_bubble_fraction(4, n_micro)))
+    """)
+
+
+def test_grad_compression_wire_dtype_and_error_feedback():
+    run_devs("""
+        import jax, jax.numpy as jnp, numpy as np, re
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed import compression
+
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def compressed_psum(g, err):
+            q, resid = compression.compress_decompress(g, err, jnp.bfloat16)
+            return jax.lax.pmean(q.astype(jnp.bfloat16), "data"), resid
+
+        f = shard_map(compressed_psum, mesh=mesh,
+                      in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
+        g = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+        err = jnp.zeros((64, 128), jnp.bfloat16)
+        # check the backend-neutral IR: the CPU *backend* upcasts bf16
+        # collectives to f32 (an artifact the roofline analyzer corrects);
+        # on TPU the wire payload stays bf16 as staged out here.
+        txt = jax.jit(f).lower(g, err).as_text()
+        i = txt.find("all_reduce")
+        assert i >= 0 and "xbf16>" in txt[i:i + 800], "bf16 all-reduce staged"
+
+        # error feedback: accumulated compressed-mean ≈ true mean over steps
+        true_acc = jnp.zeros((64, 128), jnp.float32)
+        comp_acc = jnp.zeros((64, 128), jnp.float32)
+        err = jnp.zeros((64, 128), jnp.bfloat16)
+        for i in range(50):
+            g = jax.random.normal(jax.random.PRNGKey(i), (64, 128), jnp.float32) * 1e-3
+            q, err = compression.compress_decompress(g, err, jnp.bfloat16)
+            comp_acc = comp_acc + q
+            true_acc = true_acc + g
+        resid = np.abs(np.asarray(comp_acc + err.astype(jnp.float32) - true_acc))
+        # with EF the drift stays O(one rounding), not O(steps·rounding)
+        assert resid.max() < 5e-5, resid.max()
+        print("COMP_OK")
+    """)
+
+
+def test_context_parallel_decode_matches():
+    run_devs("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.distributed import sharding as shard_lib
+        from repro.models.model import build_model
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, L = 1, 64
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
+                                              cfg.vocab_size)}
+        _, cache = model.prefill(params, batch, cache_len=L)
+        tok = jnp.ones((B, 1), jnp.int32)
+        ref, _ = model.decode_step(params, cache, tok, jnp.int32(16))
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with mesh:
+            p_sh = shard_lib.state_shardings(
+                jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), mesh)
+            c_sh = shard_lib.cache_shardings(
+                jax.eval_shape(lambda: cache), mesh, context_parallel=True)
+            pd = jax.device_put(params, p_sh)
+            cd = jax.device_put(cache, c_sh)
+            got, _ = jax.jit(model.decode_step)(pd, cd, tok, jnp.int32(16))
+        np.testing.assert_allclose(np.asarray(ref, np.float32),
+                                   np.asarray(got, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+        print("CTX_OK")
+    """)

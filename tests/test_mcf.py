@@ -1,0 +1,206 @@
+"""MCF error-free-transformation correctness vs float64 oracle.
+
+These are the load-bearing numerics tests: every Collage guarantee reduces to
+these identities holding under jitted XLA bf16 arithmetic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mcf
+from repro.core.mcf import Expansion
+
+F64 = np.float64
+
+
+def _rand_bf16(key, shape, scale=1.0):
+    x = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return x.astype(jnp.bfloat16)
+
+
+def _exact(x):
+    return np.asarray(x, dtype=F64)
+
+
+@pytest.mark.parametrize("scale_b", [1.0, 1e-3, 1e-6, 1e3])
+def test_fast2sum_exact(scale_b):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand_bf16(k1, (4096,), 10.0)
+    b = _rand_bf16(k2, (4096,), scale_b)
+    big = jnp.where(jnp.abs(a) >= jnp.abs(b), a, b)
+    small = jnp.where(jnp.abs(a) >= jnp.abs(b), b, a)
+    x, y = jax.jit(mcf.fast2sum)(big, small)
+    np.testing.assert_array_equal(_exact(x) + _exact(y), _exact(big) + _exact(small))
+
+
+def test_two_sum_exact_no_precondition():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = _rand_bf16(k1, (4096,), 1e-4)
+    b = _rand_bf16(k2, (4096,), 1e4)  # |b| >> |a|: Fast2Sum precondition broken
+    x, y = jax.jit(mcf.two_sum)(a, b)
+    np.testing.assert_array_equal(_exact(x) + _exact(y), _exact(a) + _exact(b))
+
+
+def test_two_prod_exact():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = _rand_bf16(k1, (4096,), 3.0)
+    b = _rand_bf16(k2, (4096,), 0.5)
+    x, e = jax.jit(mcf.two_prod)(a, b)
+    # bf16×bf16 products are exact in f64; x+e must equal them exactly.
+    np.testing.assert_array_equal(_exact(x) + _exact(e), _exact(a) * _exact(b))
+
+
+def test_two_prod_error_bound():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a, b = _rand_bf16(k1, (4096,)), _rand_bf16(k2, (4096,))
+    x, e = mcf.two_prod(a, b)
+    u = np.asarray(mcf.ulp(x), np.float64)
+    assert np.all(np.abs(_exact(e)) <= u / 2 + 1e-30)
+
+
+def test_grow_exactness_and_nonoverlap():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    hi = _rand_bf16(k1, (4096,), 100.0)
+    lo = _rand_bf16(k2, (4096,), 1e-4)
+    a = _rand_bf16(k3, (4096,), 1e-2)
+    e = jax.jit(mcf.grow)(Expansion(hi, lo), a)
+    got = _exact(e.hi) + _exact(e.lo)
+    want = _exact(hi) + _exact(lo) + _exact(a)
+    # Grow renormalizes: result within ulp(hi)^2-level of exact triple sum.
+    err = np.abs(got - want)
+    tol = np.asarray(mcf.ulp(e.hi), np.float64) * np.asarray(
+        mcf.ulp(jnp.ones_like(e.hi)), np.float64)
+    assert np.all(err <= tol + 1e-30), err.max()
+    # non-overlap: |lo| < ulp(hi)/2 (allow == for ties)
+    assert np.all(np.abs(_exact(e.lo)) <= np.asarray(mcf.ulp(e.hi), F64) / 2)
+
+
+def test_grow_preserves_tiny_updates():
+    """The Collage headline: θ=200, Δθ=0.1 — plain bf16 ⊕ loses it, Grow keeps it."""
+    theta = jnp.full((8,), 200.0, jnp.bfloat16)
+    upd = jnp.full((8,), 0.1, jnp.bfloat16)
+    assert np.all(np.asarray(theta + upd) == np.asarray(theta))  # lost arithmetic
+    e = mcf.grow(mcf.zeros_like_expansion(theta), upd)
+    np.testing.assert_allclose(np.asarray(e.value(jnp.float32)),
+                               200.0 + float(jnp.bfloat16(0.1)), rtol=0, atol=1e-6)
+    # 1000 tiny updates accumulate ~exactly with Grow, not at all with ⊕
+    def body(c, _):
+        exp, plain = c
+        return (mcf.grow(exp, upd[:1]), plain + upd[:1]), ()
+    (e2, plain), _ = jax.lax.scan(body, (mcf.zeros_like_expansion(theta[:1]), theta[:1]),
+                                  None, length=1000)
+    assert float(plain[0]) == 200.0
+    got = float(e2.value(jnp.float32)[0])
+    want = 200.0 + 1000 * float(jnp.bfloat16(0.1))
+    assert abs(got - want) / want < 1e-3
+
+
+def test_mul_expansion_accuracy():
+    # Paper Table 1 usage: (β₂ as expansion) × (v as expansion)
+    b2 = mcf.from_float(0.999, jnp.bfloat16, (1024,))
+    k = jax.random.PRNGKey(5)
+    vhi = jnp.abs(_rand_bf16(k, (1024,), 1.0))
+    v = Expansion(vhi, jnp.zeros_like(vhi))
+    out = jax.jit(mcf.mul)(b2, v)
+    want = 0.999 * _exact(vhi)
+    got = _exact(out.hi) + _exact(out.lo)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-30)
+    # length-2 expansion error ~ ulp² level ≈ 2^-14 relative for bf16
+    assert rel.max() < 2 ** -13
+    # contrast: plain bf16 multiply by bf16(0.999)==1.0 has 1e-3 rel error
+    plain = _exact(vhi * jnp.bfloat16(0.999))
+    rel_plain = np.abs(plain - want) / np.maximum(np.abs(want), 1e-30)
+    assert rel_plain.max() > 5e-4
+
+
+def test_from_float_table1():
+    """Paper Table 1: exact bf16 expansions of β₂ constants."""
+    for b2 in (0.999, 0.99, 0.95):
+        e = mcf.from_float(b2, jnp.bfloat16)
+        assert abs(float(e.hi) + float(e.lo) - b2) < 2 ** -16, b2
+    e999 = mcf.from_float(0.999, jnp.bfloat16)
+    assert float(e999.hi) == 1.0 and float(e999.lo) < 0  # (1.0, -0.001)
+    assert float(jnp.bfloat16(0.999)) == 1.0  # the rounding Collage fixes
+
+
+def test_scaling_exactish():
+    e = mcf.from_float(0.999, jnp.bfloat16, (512,))
+    k = jax.random.PRNGKey(6)
+    v = _rand_bf16(k, (512,), 2.0)
+    out = mcf.scaling(e, v)
+    want = (0.999) * _exact(v)
+    got = _exact(out.hi) + _exact(out.lo)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-30)
+    assert rel.max() < 2 ** -13
+
+
+def test_add_expansion():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a = Expansion(_rand_bf16(k1, (512,), 10.0), _rand_bf16(k2, (512,), 1e-4))
+    b = Expansion(_rand_bf16(k2, (512,), 5.0), _rand_bf16(k1, (512,), 1e-4))
+    out = mcf.add_expansion(a, b)
+    want = _exact(a.hi) + _exact(a.lo) + _exact(b.hi) + _exact(b.lo)
+    got = _exact(out.hi) + _exact(out.lo)
+    err = np.abs(got - want)
+    assert err.max() < np.abs(want).max() * 2 ** -14
+
+
+def test_ulp_values():
+    # Table 9: ulp(1) = 2^-7 for bf16
+    assert float(mcf.ulp(jnp.ones((), jnp.bfloat16))) == 2 ** -7
+    assert float(mcf.ulp(jnp.ones((), jnp.float32))) == 2 ** -23
+    assert float(mcf.ulp(jnp.asarray(200.0, jnp.bfloat16))) == 1.0  # §3.1 remark
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((20000,), 1.0 + 2 ** -9, jnp.float32)  # quarter-ulp above 1.0
+    out = mcf.stochastic_round(x, jnp.bfloat16, jax.random.PRNGKey(8))
+    mean = float(np.asarray(out, np.float64).mean())
+    # E[SR(x)] = x: 75% → 1.0, 25% → 1.0078125
+    assert abs(mean - (1.0 + 2 ** -9)) < 3e-4
+    vals = set(np.unique(np.asarray(out, np.float32)).tolist())
+    assert vals == {1.0, 1.0 + 2 ** -7}
+
+
+# ------------------------------- hypothesis property tests ------------------
+finite_f = st.floats(min_value=-2.0**80, max_value=2.0**80,
+                     allow_nan=False, allow_infinity=False, width=32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=finite_f, b=finite_f)
+def test_two_sum_property(a, b):
+    ab = jnp.asarray([a, b], jnp.float32).astype(jnp.bfloat16)
+    x, y = mcf.two_sum(ab[0], ab[1])
+    if not (np.isfinite(float(x))):  # overflow: identity can't hold
+        return
+    assert F64(np.asarray(x)) + F64(np.asarray(y)) == \
+        F64(np.asarray(ab[0])) + F64(np.asarray(ab[1]))
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.floats(min_value=-2.0**40, max_value=2.0**40, allow_nan=False, width=32),
+       b=st.floats(min_value=-2.0**40, max_value=2.0**40, allow_nan=False, width=32))
+def test_two_prod_property(a, b):
+    ab = jnp.asarray([a, b], jnp.float32).astype(jnp.bfloat16)
+    x, e = mcf.two_prod(ab[0], ab[1])
+    prod = F64(np.asarray(ab[0])) * F64(np.asarray(ab[1]))
+    if not np.isfinite(float(x)) or (prod != 0 and abs(prod) < 2.0 ** -100):
+        return  # overflow/underflow: excluded by Dekker's theorem
+    assert F64(np.asarray(x)) + F64(np.asarray(e)) == \
+        F64(np.asarray(ab[0])) * F64(np.asarray(ab[1]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(hi=st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+       a=st.floats(min_value=-1.0, max_value=1.0, allow_nan=False, width=32))
+def test_grow_property(hi, a):
+    h = jnp.asarray(hi, jnp.float32).astype(jnp.bfloat16)
+    aa = jnp.asarray(a, jnp.float32).astype(jnp.bfloat16)
+    e = mcf.grow(Expansion(h, jnp.zeros_like(h)), aa)
+    got = F64(np.asarray(e.hi)) + F64(np.asarray(e.lo))
+    want = F64(np.asarray(h)) + F64(np.asarray(aa))
+    # exact when the two_sum/fast2sum chain is exact (always for len-2 here)
+    assert got == want

@@ -1,0 +1,172 @@
+"""Sequence-mixer correctness: chunked-parallel implementations vs
+token-by-token sequential oracles; banded vs masked local attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.transformer import _mamba_state_after, _rwkv_state_after
+
+
+def _x(key, B, L, D, dtype=jnp.bfloat16, scale=0.5):
+    return (jax.random.normal(key, (B, L, D), jnp.float32) * scale).astype(dtype)
+
+
+class TestMamba:
+    def setup_method(self):
+        self.cfg = get_config("jamba-1.5-large-398b", smoke=True)
+        self.p = ssm_lib.mamba_init(jax.random.PRNGKey(0), self.cfg, jnp.bfloat16)
+
+    @pytest.mark.parametrize("L", [8, 16, 32])
+    def test_chunked_matches_sequential(self, L):
+        x = _x(jax.random.PRNGKey(1), 2, L, self.cfg.d_model)
+        par = jax.jit(lambda p, x: ssm_lib.mamba_apply(p, x, self.cfg))(self.p, x)
+        seq = ssm_lib.mamba_reference(self.p, x, self.cfg)
+        np.testing.assert_allclose(np.asarray(par, np.float32),
+                                   np.asarray(seq, np.float32),
+                                   rtol=0.05, atol=0.02)
+
+    def test_prefill_state_matches_decode_rollout(self):
+        L = 16
+        x = _x(jax.random.PRNGKey(2), 2, L, self.cfg.d_model)
+        state = jax.jit(lambda p, x: _mamba_state_after(p, x, self.cfg))(self.p, x)
+        ref_state = ssm_lib.mamba_init_state(self.cfg, 2, x.dtype)
+        for t in range(L):
+            _, ref_state = ssm_lib.mamba_decode(self.p, x[:, t:t + 1],
+                                                self.cfg, ref_state)
+        np.testing.assert_allclose(np.asarray(state["h"]),
+                                   np.asarray(ref_state["h"]),
+                                   rtol=0.05, atol=0.02)
+        np.testing.assert_array_equal(np.asarray(state["conv"], np.float32),
+                                      np.asarray(ref_state["conv"], np.float32))
+
+
+class TestRWKV6:
+    def setup_method(self):
+        self.cfg = get_config("rwkv6-1.6b", smoke=True)
+        self.p = rwkv_lib.rwkv_tmix_init(jax.random.PRNGKey(0), self.cfg,
+                                         jnp.bfloat16)
+
+    @pytest.mark.parametrize("L", [8, 16, 32])
+    def test_chunked_matches_sequential(self, L):
+        x = _x(jax.random.PRNGKey(1), 2, L, self.cfg.d_model)
+        par = jax.jit(lambda p, x: rwkv_lib.rwkv_tmix_apply(p, x, self.cfg))(
+            self.p, x)
+        seq = rwkv_lib.rwkv_tmix_reference(self.p, x, self.cfg)
+        np.testing.assert_allclose(np.asarray(par, np.float32),
+                                   np.asarray(seq, np.float32),
+                                   rtol=0.05, atol=0.02)
+
+    def test_state_after_prefill(self):
+        L = 16
+        x = _x(jax.random.PRNGKey(3), 2, L, self.cfg.d_model)
+        h = x  # _rwkv_state_after takes the normed input; use raw for the test
+        state = jax.jit(lambda p, x: _rwkv_state_after(p, x, self.cfg))(self.p, h)
+        ref = rwkv_lib.rwkv_tmix_init_state(self.cfg, 2, x.dtype)
+        for t in range(L):
+            _, ref = rwkv_lib.rwkv_tmix_decode(self.p, h[:, t:t + 1],
+                                               self.cfg, ref)
+        np.testing.assert_allclose(np.asarray(state["S"]), np.asarray(ref["S"]),
+                                   rtol=0.05, atol=0.02)
+        np.testing.assert_array_equal(
+            np.asarray(state["last_x"], np.float32),
+            np.asarray(ref["last_x"], np.float32))
+
+    def test_decay_actually_decays(self):
+        """Finch data-dependent decay: state norm shrinks under zero inputs."""
+        state = rwkv_lib.rwkv_tmix_init_state(self.cfg, 1, jnp.bfloat16)
+        state = {**state, "S": jnp.ones_like(state["S"])}
+        x = jnp.zeros((1, 1, self.cfg.d_model), jnp.bfloat16)
+        _, s2 = rwkv_lib.rwkv_tmix_decode(self.p, x, self.cfg, state)
+        assert float(jnp.abs(s2["S"]).mean()) < float(jnp.abs(state["S"]).mean())
+
+
+class TestBandedAttention:
+    @pytest.mark.parametrize("L,W", [(32, 8), (64, 16), (128, 32)])
+    def test_banded_equals_masked(self, L, W):
+        cfg = dataclasses.replace(get_config("gemma3-27b", smoke=True),
+                                  window_size=W)
+        p = attn.attn_init(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+        x = _x(jax.random.PRNGKey(1), 2, L, cfg.d_model)
+        full = jax.jit(lambda p, x: attn.full_attention(
+            p, x, cfg, causal=True, window=W))(p, x)
+        band = jax.jit(lambda p, x: attn.banded_attention(
+            p, x, cfg, window=W))(p, x)
+        np.testing.assert_allclose(np.asarray(full, np.float32),
+                                   np.asarray(band, np.float32),
+                                   rtol=0.05, atol=0.02)
+
+    def test_window_limits_receptive_field(self):
+        """Changing a token ≥W positions back must not affect local output."""
+        cfg = dataclasses.replace(get_config("gemma3-27b", smoke=True),
+                                  window_size=8)
+        p = attn.attn_init(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+        x1 = _x(jax.random.PRNGKey(1), 1, 32, cfg.d_model)
+        x2 = x1.at[:, 0].add(1.0)
+        o1 = attn.full_attention(p, x1, cfg, causal=True, window=8)
+        o2 = attn.full_attention(p, x2, cfg, causal=True, window=8)
+        np.testing.assert_array_equal(np.asarray(o1[:, 16:], np.float32),
+                                      np.asarray(o2[:, 16:], np.float32))
+
+
+class TestDecodeConsistency:
+    """KV-cache decode must reproduce teacher-forced full-forward logits."""
+
+    @pytest.mark.parametrize("arch", ["granite-3-2b", "gemma3-27b",
+                                      "rwkv6-1.6b", "jamba-1.5-large-398b",
+                                      "qwen3-moe-30b-a3b",
+                                      "seamless-m4t-medium"])
+    def test_prefill_then_decode_matches_forward(self, arch):
+        from repro.models.model import build_model
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, L = 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        batch = {"tokens": jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size),
+                 "labels": jnp.zeros((B, L), jnp.int32)}
+        if cfg.is_encdec:
+            batch["frontend"] = _x(ks[2], B, cfg.frontend_len, cfg.d_model,
+                                   scale=0.1)
+        if cfg.family == "vlm":
+            pytest.skip("vlm prefix handled in serve tests")
+        full_logits, _ = model.forward(params, batch)
+
+        # prefill on the first half, decode the second half token by token
+        half = L // 2
+        pre_batch = {**batch, "tokens": batch["tokens"][:, :half]}
+        logits_p, cache = model.prefill(params, pre_batch, cache_len=L)
+        np.testing.assert_allclose(
+            np.asarray(logits_p[:, 0]), np.asarray(full_logits[:, half - 1]),
+            rtol=0.05, atol=0.05)
+        memory = None
+        for t in range(half, L):
+            logits_t, cache = model.decode_step(
+                params, cache, batch["tokens"][:, t:t + 1], jnp.int32(t))
+            np.testing.assert_allclose(
+                np.asarray(logits_t[:, 0]), np.asarray(full_logits[:, t]),
+                rtol=0.08, atol=0.08)
+
+
+class TestMoEGrouping:
+    def test_grouped_dispatch_matches_ungrouped(self):
+        """moe_group_size must not change results when capacity is ample."""
+        import dataclasses
+        from repro.models import moe as moe_lib
+        from repro.configs import get_config
+        cfg0 = dataclasses.replace(get_config("qwen3-moe-30b-a3b", smoke=True),
+                                   capacity_factor=8.0)
+        cfg1 = dataclasses.replace(cfg0, moe_group_size=16)
+        p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg0, jnp.bfloat16)
+        x = _x(jax.random.PRNGKey(1), 2, 32, cfg0.d_model)
+        y0, _ = jax.jit(lambda p, x: moe_lib.moe_apply(p, x, cfg0))(p, x)
+        y1, _ = jax.jit(lambda p, x: moe_lib.moe_apply(p, x, cfg1))(p, x)
+        np.testing.assert_allclose(np.asarray(y0, np.float32),
+                                   np.asarray(y1, np.float32),
+                                   rtol=0.05, atol=0.02)
