@@ -11,10 +11,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import roofline, table_benchmarks as tb
+from benchmarks import optimizer_step, roofline, table_benchmarks as tb
 
 
 BENCHES = [
+    ("opt_step", optimizer_step.optimizer_step_bench),
     ("table1", tb.table1_expansions),
     ("table2", tb.table2_memory),
     ("table3", tb.table3_pretrain),

@@ -17,7 +17,17 @@ Numerical placement follows the paper exactly:
 
 A fused single-HBM-pass Pallas kernel implementing the same math lives in
 ``repro.kernels.collage_update`` (enable with ``use_fused_kernel=True``);
-its oracle is this module.
+its oracle is this module. Two execution layouts exist:
+
+  * tree layout (``init``/``step``): per-leaf pytree state — the reference
+    semantics. With ``use_fused_kernel`` the step routes through the bucket
+    engine but re-flattens the pytrees every call.
+  * bucket layout (``init_bucketed``/``step_bucketed``): params + ALL
+    optimizer state persist as contiguous flat buckets (core.bucketing,
+    DESIGN.md §5) — one fused launch per bucket, zero per-step concat/split
+    traffic. Stochastic rounding uses the engine's counter-based noise
+    stream instead of the per-leaf threefry keys (both unbiased; streams
+    differ bit-wise).
 """
 from __future__ import annotations
 
@@ -28,7 +38,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import mcf
+from repro.core import bucketing, mcf
 from repro.core.mcf import Expansion
 from repro.core.precision import PrecisionPolicy, Strategy
 
@@ -85,7 +95,8 @@ class CollageAdamW:
                  policy: PrecisionPolicy | None = None,
                  compute_metrics: bool = False,
                  use_fused_kernel: bool = False,
-                 kernel_interpret: bool = True):
+                 kernel_interpret: bool = True,
+                 sr_seed: int = 0):
         self.lr = learning_rate if callable(learning_rate) else (lambda t: jnp.float32(learning_rate))
         self.b1 = float(b1)
         self.b2 = float(b2)
@@ -95,6 +106,10 @@ class CollageAdamW:
         self.compute_metrics = compute_metrics
         self.use_fused_kernel = use_fused_kernel
         self.kernel_interpret = kernel_interpret
+        # SR rounding-noise seed. Configurable so a migrated/resumed run does
+        # not silently replay the identical noise stream (the old behaviour
+        # hard-coded PRNGKey(0) in both init and convert_state).
+        self.sr_seed = int(sr_seed)
 
     # ------------------------------------------------------------------ init
     def init(self, params: Any) -> CollageOptState:
@@ -114,9 +129,33 @@ class CollageAdamW:
         master = None
         if s.uses_master_weights:
             master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
-        rng = jax.random.PRNGKey(0) if s is Strategy.SR else None
+        rng = jax.random.PRNGKey(self.sr_seed) if s is Strategy.SR else None
         return CollageOptState(step=jnp.zeros((), jnp.int32), m=m, v=v,
                                delta=delta, master=master, rng=rng)
+
+    # -------------------------------------------------------- bucketed layout
+    def init_bucketed(self, params: Any) -> tuple[
+            bucketing.BucketedParams, bucketing.BucketedOptState]:
+        """Init with params + optimizer state as persistent flat buckets.
+
+        The layout knobs come from ``policy.bucketing``. The returned
+        BucketedParams replaces the params pytree in the TrainState;
+        materialize the model view with ``.tree()`` at the apply boundary."""
+        bp = self.policy.bucketing
+        layout = bucketing.build_layout(
+            params, max_bucket_elems=bp.max_bucket_elems,
+            pad_multiple=bp.pad_multiple)
+        return bucket_state(self.init(params), params, layout, self.policy,
+                            sr_seed=self.sr_seed)
+
+    def step_bucketed(self, grads, bparams: bucketing.BucketedParams,
+                      bstate: bucketing.BucketedOptState):
+        """One step over buckets: one fused launch per bucket, no per-step
+        flatten/concat (tests assert the jaxpr is concat-free). ``grads`` is
+        a BucketedParams (``jax.grad`` w.r.t. bucketed params) or a tuple of
+        flat bucket arrays."""
+        from repro.kernels.collage_update import ops as kops
+        return kops.bucketed_step(self, grads, bparams, bstate)
 
     # ------------------------------------------------------------------ step
     def step(self, grads: Any, params: Any, state: CollageOptState
@@ -130,8 +169,10 @@ class CollageAdamW:
         bc1 = 1.0 - jnp.float32(self.b1) ** tf
         bc2 = 1.0 - jnp.float32(self.b2) ** tf
 
-        if self.use_fused_kernel and s in (
-                Strategy.A_BF16, Strategy.B_COLLAGE_LIGHT, Strategy.C_COLLAGE_PLUS):
+        if self.use_fused_kernel:
+            # engine covers all six strategies + real StepMetrics; SR uses
+            # the counter-based noise stream (differs bit-wise from the
+            # per-leaf threefry stream below, equally unbiased).
             from repro.kernels.collage_update import ops as kops
             new_params, new_state, metrics = kops.fused_step(
                 self, grads, params, state, lr, bc1, bc2,
@@ -281,12 +322,78 @@ class CollageAdamW:
             grad_norm=jnp.sqrt(gn2))
 
 
+def bucket_state(state: CollageOptState, params: Any,
+                 layout: bucketing.BucketLayout, policy: PrecisionPolicy,
+                 *, sr_seed: int = 0) -> tuple[
+                     bucketing.BucketedParams, bucketing.BucketedOptState]:
+    """Lift a tree-layout (params, CollageOptState) into the persistent
+    bucket layout — the one-time concat at init / checkpoint migration.
+
+    The SR threefry key does not carry over (the bucket engine's noise is
+    counter-based): the stream restarts from ``sr_seed``."""
+    s = policy.strategy
+    f32 = jnp.float32
+    opt_dt = f32 if s in (Strategy.D_MINUS_MW, Strategy.D_MIXED_MW) else None
+    # the fused update assumes component-dtype parameter buckets
+    for b in layout.buckets:
+        assert jnp.dtype(b.dtype) == jnp.dtype(policy.param_dtype), \
+            (b.dtype, policy.param_dtype)
+    bparams = bucketing.BucketedParams(
+        bucketing.bucket_tree(params, layout), layout)
+    m = bucketing.bucket_tree(state.m, layout, dtype=opt_dt)
+    if s.uses_expansion_second_moment:
+        leaves_v = layout.treedef.flatten_up_to(state.v)
+        vhi = bucketing.bucket_leaves([v.hi for v in leaves_v], layout)
+        vlo = bucketing.bucket_leaves([v.lo for v in leaves_v], layout)
+    else:
+        vhi = bucketing.bucket_tree(state.v, layout, dtype=opt_dt)
+        vlo = None
+    delta = bucketing.bucket_tree(state.delta, layout) \
+        if state.delta is not None else None
+    master = bucketing.bucket_tree(state.master, layout, dtype=f32) \
+        if state.master is not None else None
+    rng = jnp.uint32(sr_seed) if s is Strategy.SR else None
+    return bparams, bucketing.BucketedOptState(
+        step=state.step, m=m, vhi=vhi, vlo=vlo, delta=delta, master=master,
+        rng=rng, layout=layout)
+
+
+def unbucket_state(bparams: bucketing.BucketedParams,
+                   bstate: bucketing.BucketedOptState,
+                   policy: PrecisionPolicy) -> tuple[Any, CollageOptState]:
+    """Inverse of ``bucket_state``: materialize the tree layout (values
+    preserved bit-exactly; the SR key is rebuilt from the bucket seed)."""
+    s = policy.strategy
+    layout = bparams.layout
+    params = bparams.tree()
+    m = bucketing.unbucket(bstate.m, layout)
+    if s.uses_expansion_second_moment:
+        his = bucketing.unbucket_leaves(bstate.vhi, layout)
+        los = bucketing.unbucket_leaves(bstate.vlo, layout)
+        v = layout.treedef.unflatten(
+            [Expansion(h, l) for h, l in zip(his, los)])
+    else:
+        v = bucketing.unbucket(bstate.vhi, layout)
+    delta = bucketing.unbucket(bstate.delta, layout) \
+        if bstate.delta is not None else None
+    master = bucketing.unbucket(bstate.master, layout) \
+        if bstate.master is not None else None
+    rng = None
+    if s is Strategy.SR:
+        rng = jnp.stack([jnp.zeros((), jnp.uint32),
+                         bstate.rng.astype(jnp.uint32)])
+    return params, CollageOptState(step=bstate.step, m=m, v=v, delta=delta,
+                                   master=master, rng=rng)
+
+
 def convert_state(state: CollageOptState, params: Any,
-                  new_policy: PrecisionPolicy) -> CollageOptState:
+                  new_policy: PrecisionPolicy, *,
+                  sr_seed: int = 0) -> CollageOptState:
     """Checkpoint-time precision migration: re-express an optimizer state
     under a different strategy (e.g. resume an fp32-master run as
     Collage-plus, or vice versa). Moment tensors are rounded/expanded;
-    master weights and residuals are (re)built as needed."""
+    master weights and residuals are (re)built as needed. ``sr_seed`` seeds
+    the SR stream of the migrated run (don't silently replay noise)."""
     s = new_policy.strategy
     cdt = new_policy.param_dtype
     f32 = jnp.float32
@@ -335,7 +442,11 @@ def convert_state(state: CollageOptState, params: Any,
             if d is None:
                 master = jax.tree_util.tree_map(
                     lambda p: p.astype(f32), params)
-    rng = jax.random.PRNGKey(0) if s is Strategy.SR else None
+    if s is Strategy.SR:
+        rng = state.rng if state.rng is not None \
+            else jax.random.PRNGKey(sr_seed)
+    else:
+        rng = None
     return CollageOptState(step=state.step, m=m, v=v, delta=delta,
                            master=master, rng=rng)
 

@@ -55,6 +55,25 @@ BYTES_PER_PARAM = {
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Knobs for the bucketed multi-tensor engine (DESIGN.md §5).
+
+    ``enabled``: keep params + ALL optimizer state as persistent flat
+    buckets (core.bucketing) so the step is one fused launch per bucket.
+    ``max_bucket_elems``: split buckets above this element count — bounds
+    per-launch VMEM working set and gives the scheduler parallelism; None
+    means one bucket per dtype.
+    ``pad_multiple``: flat-axis padding granularity; must be a multiple of
+    128 (VPU lanes). Shard-aware callers pass lcm(128, dp_size) so buckets
+    divide the FSDP axis exactly (distributed.sharding.bucket_pad_multiple).
+    """
+
+    enabled: bool = False
+    max_bucket_elems: int | None = None
+    pad_multiple: int = 1024     # 8 sublanes × 128 lanes
+
+
+@dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
     """End-to-end numeric policy for a training/serving run."""
 
@@ -66,6 +85,8 @@ class PrecisionPolicy:
     # the Collage-correct choice); "pytorch" = separate (1-αλ)θ step (App. D
     # Eq. 4 — demonstrably lost arithmetic in bf16, kept for ablation).
     wd_mode: str = "fused"
+    # bucketed multi-tensor engine layout knobs (core.bucketing)
+    bucketing: BucketPolicy = BucketPolicy()
 
     @property
     def bytes_per_param(self) -> int:

@@ -14,14 +14,25 @@ Strategy (DESIGN.md §4): FSDP×TP.
 Rules are *name-based* (the last named path component) + rank-based (a
 leading layer-stack dim from scan-over-layers gets a None prepended), so one
 table covers all 10 architectures.
+
+Bucketed states (core.bucketing, DESIGN.md §5) shard differently: every
+flat 1-D bucket — params AND all optimizer roles — shards along its single
+axis over the dp axes (ZeRO-style). Because the optimizer update is purely
+elementwise and every role bucket has the identical layout, all roles
+co-shard with zero extra collectives, exactly like the per-leaf rule; the
+engine composes with FSDP for free. Pad buckets with
+``bucket_pad_multiple(mesh)`` so the flat axis divides the dp axes exactly.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bucketing
 
 # name → base spec (without the layer-stack dim). "F" marks the FSDP slot.
 _F = "__fsdp__"
@@ -103,10 +114,57 @@ def param_spec(path, leaf, mesh: Mesh, fsdp: bool = True,
     return P(*fixed)
 
 
+_BUCKET_FIELDS = frozenset(bucketing.BUCKET_STATE_FIELDS)
+
+
+def _is_bucket_leaf(path, leaf) -> bool:
+    """A 1-D leaf reached through a BucketedParams/BucketedOptState role
+    attribute then a tuple index (the per-bucket flat arrays)."""
+    if getattr(leaf, "ndim", None) != 1:
+        return False
+    for i, entry in enumerate(path):
+        if (isinstance(entry, jax.tree_util.GetAttrKey)
+                and entry.name in _BUCKET_FIELDS
+                and i + 1 < len(path)
+                and isinstance(path[i + 1], jax.tree_util.SequenceKey)):
+            return True
+    return False
+
+
+def bucket_spec(leaf, mesh: Mesh, fsdp: bool = True) -> P:
+    """Shard a flat bucket along its single axis over the dp axes (ZeRO-3
+    style); replicate when the padded length doesn't divide the axis."""
+    if not fsdp:
+        return P()
+    dp = _dp_axes(mesh)
+    if dp is None:
+        return P()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n *= sizes[a]
+    return P(dp) if n > 1 and leaf.shape[0] % n == 0 else P()
+
+
+def bucket_pad_multiple(mesh: Mesh) -> int:
+    """Layout pad_multiple that keeps every bucket dividing both the VMEM
+    tile (8×128) and the mesh's dp axes — pass to BucketPolicy."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = _dp_axes(mesh)
+    n = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        if a:
+            n *= sizes[a]
+    return math.lcm(bucketing.PAD_DEFAULT, n)
+
+
 def state_shardings(abstract_tree: Any, mesh: Mesh, fsdp: bool = True,
                     tp_mode: str = "full") -> Any:
-    """NamedShardings for a TrainState/params pytree (path-rule based)."""
+    """NamedShardings for a TrainState/params pytree (path-rule based);
+    bucketed leaves get the flat-axis FSDP spec."""
     def leaf_fn(path, leaf):
+        if _is_bucket_leaf(path, leaf):
+            return NamedSharding(mesh, bucket_spec(leaf, mesh, fsdp))
         return NamedSharding(mesh, param_spec(path, leaf, mesh, fsdp, tp_mode))
     return jax.tree_util.tree_map_with_path(leaf_fn, abstract_tree)
 

@@ -1,17 +1,36 @@
-"""Fused Collage-AdamW Pallas-TPU kernel (Paper Remark 5.2).
+"""Fused Collage-AdamW Pallas-TPU kernel (Paper Remark 5.2) — all six
+strategies + in-kernel metrics epilogue, over persistent flat buckets.
 
 One HBM round-trip for the entire Algorithm 2 update: each grid step loads
-(8,128)-aligned VMEM tiles of {g, θ, δθ, m, v(, δv)}, runs the full
-EMA + bias-corrected update + Grow/Mul MCF pipeline in fp32 VPU registers
-with explicit round-to-nearest onto the bf16 grid, and stores the bf16
-tiles back — 6 reads + 5 writes of 2 bytes/param for Collage-plus vs the
-≥4×4B reads + 3×4B writes of the fp32-master-weight path (option D).
+(8,128)-aligned VMEM tiles of the strategy's bucket-resident state (see
+``repro.core.bucketing``), runs the full EMA + bias-corrected update +
+Grow/Mul MCF pipeline in fp32 VPU registers with explicit round-to-nearest
+onto the bf16 grid, and stores the tiles back. Per-strategy state tiles:
+
+  A       θ, m, v                      (all bf16)
+  B       θ, m, v, δθ                  (bf16)
+  C       θ, m, v-hi, v-lo, δθ         (bf16; v is an MCF expansion)
+  KAHAN   θ, m, v, c                   (bf16; c = compensation buffer)
+  SR      θ, m, v                      (bf16; + counter-based noise bits)
+  D⁻/D    θ (bf16), m, v fp32 (+ fp32 master for D)
+
+The **metrics epilogue** accumulates the Paper Def. 3.3 diagnostics in the
+same HBM pass: per grid step a (1, 8) partial row of
+⟨Δθ,Δθ̂⟩, ‖Δθ‖², ‖Δθ̂‖², lost-count, ‖g‖² is written; the tiny (grid, 8)
+reduction happens in the wrapper — EDQ costs zero extra passes over HBM.
+
+**Stochastic rounding** is counter-based (bucketing.sr_noise_bits): 16 noise
+bits per element derived from hash(seed, element-index) — no threaded key,
+so the kernel stays a pure elementwise pass; the identical pure-jnp
+definition is used by ``ref.py``, making kernel and oracle bit-identical by
+construction.
 
 Numeric discipline matches repro.core.mcf exactly (the ref.py oracle):
 ``lax.reduce_precision`` realizes each bf16 rounding; on real TPU hardware
 the same sequence maps to native bf16 VPU ops (which are RN by spec) — the
 explicit form is also what interpret-mode validation executes, so CPU
-validation covers the exact arithmetic the TPU performs.
+validation covers the exact arithmetic the TPU performs. Option-D arithmetic
+runs in plain fp32 (no reduce_precision) exactly like the library path.
 """
 from __future__ import annotations
 
@@ -21,9 +40,45 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import bucketing
+
 LANES = 128       # TPU VPU lane count: last dim of every tile
 SUBLANES = 8      # (8, 128) is the fp32/bf16 VMEM native tile
 BLOCK_ROWS = 256  # rows per grid step → (256, 128) tiles, 64 KiB bf16 each
+N_PARTIALS = 8    # metrics partial row: dot, un2, en2, lost, gn2, 0, 0, 0
+
+# bucket-state fields each strategy reads AND writes, in tile order
+_FIELDS = {
+    "A": ("theta", "m", "vhi"),
+    "B": ("theta", "m", "vhi", "delta"),
+    "C": ("theta", "m", "vhi", "vlo", "delta"),
+    "KAHAN": ("theta", "m", "vhi", "delta"),
+    "SR": ("theta", "m", "vhi"),
+    "D-": ("theta", "m", "vhi"),
+    "D": ("theta", "m", "vhi", "master"),
+}
+
+
+def state_fields(strategy: str) -> tuple:
+    return _FIELDS[strategy]
+
+
+def field_dtype(field: str, strategy: str):
+    """Storage dtype of a bucket-state field (bf16 component family vs the
+    fp32 optimizer states of option D)."""
+    if field == "master" or (strategy in ("D-", "D") and field in ("m", "vhi")):
+        return jnp.float32
+    return jnp.bfloat16
+
+
+def choose_block_rows(rows: int, block_rows: int = BLOCK_ROWS) -> int:
+    """Largest power-of-two-ish divisor of ``rows`` ≤ block_rows — shared by
+    the kernel wrapper and the ref oracle so metric partial tiling (and
+    therefore f32 summation order) is identical in both."""
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+    return br
 
 
 def _rn(x):  # round-to-nearest-even onto the bf16 grid, stays f32
@@ -57,70 +112,141 @@ def _mul_expansion(a_hi, a_lo, b_hi, b_lo):
 
 
 def collage_update_kernel(
-        # scalar-ish (1,1) f32 blocks
-        lr_ref, bc1_ref, bc2_ref,
-        # bf16 tiles
-        g_ref, theta_ref, delta_ref, m_ref, vhi_ref, vlo_ref,
-        # outputs
-        theta_out, delta_out, m_out, vhi_out, vlo_out,
-        *, b1: float, b2: float, eps: float, wd: float, strategy: str):
+        *refs, b1: float, b2: float, eps: float, wd: float, strategy: str,
+        pt_decay: bool, compute_metrics: bool, block_rows: int):
+    """One grid step over a (block_rows, 128) tile of the bucket.
+
+    refs layout: scalars (lr, bc1, bc2[, seed]) · g · state-field tiles ·
+    state-field output tiles · [metrics partial row]."""
+    fields = _FIELDS[strategy]
+    it = iter(refs)
+    lr_ref, bc1_ref, bc2_ref = next(it), next(it), next(it)
+    seed_ref = next(it) if strategy == "SR" else None
+    g_ref = next(it)
+    in_refs = {f: next(it) for f in fields}
+    out_refs = {f: next(it) for f in fields}
+    metrics_ref = next(it) if compute_metrics else None
+
     lr = lr_ref[0, 0]
     bc1 = bc1_ref[0, 0]
     bc2 = bc2_ref[0, 0]
     f32 = jnp.float32
     g = g_ref[...].astype(f32)
-    theta = theta_ref[...].astype(f32)
-    m = m_ref[...].astype(f32)
-    vhi = vhi_ref[...].astype(f32)
+    theta = in_refs["theta"][...].astype(f32)
+    m = in_refs["m"][...].astype(f32)
+    vhi = in_refs["vhi"][...].astype(f32)
+    # weight decay inside the summed update (Alg. 2 l.12) unless the
+    # PyTorch-style separate-decay ablation is selected (App. D Eq. 4).
+    wd_upd = 0.0 if pt_decay else wd
 
-    cb1, c1m = _rn(f32(b1)), _rn(f32(1.0 - b1))
-    cb2, c2m = _rn(f32(b2)), _rn(f32(1.0 - b2))
-    m_new = _rn(_rn(cb1 * m) + _rn(c1m * g))
-    g2 = _rn(g * g)
-
-    if strategy == "C":
-        vlo = vlo_ref[...].astype(f32)
-        b2hi = _rn(f32(b2))
-        b2lo = _rn(f32(b2) - b2hi)
-        ph, plo = _mul_expansion(b2hi, b2lo, vhi, vlo)
-        vhi_new, vlo_new = _grow(ph, plo, _rn(c2m * g2))
-        vhat = (vhi_new + vlo_new) / bc2
-    else:  # "A"/"B": β₂ cast to bf16 (the paper's failure mode, kept faithful)
-        vhi_new = _rn(_rn(cb2 * vhi) + _rn(c2m * g2))
-        vlo_new = vlo_ref[...].astype(f32)
+    if strategy in ("D-", "D"):
+        # fp32 optimizer states, plain f32 arithmetic (no rounding emulation)
+        m_new = f32(b1) * m + f32(1.0 - b1) * g
+        vhi_new = f32(b2) * vhi + f32(1.0 - b2) * g * g
+        mhat = m_new / bc1
         vhat = vhi_new / bc2
+        if strategy == "D":
+            w = in_refs["master"][...]
+            upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd_upd * w)
+            w_new = w + upd                       # fp32 master update
+            theta_new = _rn(w_new)                # RN onto the bf16 grid
+            out_refs["master"][...] = w_new
+        else:
+            upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd_upd * theta)
+            theta_new = _rn(theta + _rn(upd))     # bf16 ⊕ → lost arithmetic
+        eff = theta_new - theta
+        out_refs["theta"][...] = theta_new.astype(jnp.bfloat16)
+        out_refs["m"][...] = m_new
+        out_refs["vhi"][...] = vhi_new
+    else:
+        # bf16 component family: strict-FPU discipline (DESIGN.md §3)
+        cb1, c1m = _rn(f32(b1)), _rn(f32(1.0 - b1))
+        cb2, c2m = _rn(f32(b2)), _rn(f32(1.0 - b2))
+        m_new = _rn(_rn(cb1 * m) + _rn(c1m * g))
+        g2 = _rn(g * g)
 
-    mhat = m_new / bc1
-    upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * theta)
-    upd16 = _rn(upd)
+        if strategy == "C":
+            vlo = in_refs["vlo"][...].astype(f32)
+            b2hi = _rn(f32(b2))
+            b2lo = _rn(f32(b2) - b2hi)
+            ph, plo = _mul_expansion(b2hi, b2lo, vhi, vlo)
+            vhi_new, vlo_new = _grow(ph, plo, _rn(c2m * g2))
+            vhat = (vhi_new + vlo_new) / bc2
+            out_refs["vlo"][...] = vlo_new.astype(jnp.bfloat16)
+        else:  # β₂ cast to bf16 (the paper's failure mode, kept faithful)
+            vhi_new = _rn(_rn(cb2 * vhi) + _rn(c2m * g2))
+            vhat = vhi_new / bc2
 
-    if strategy == "A":
-        theta_new = _rn(theta + upd16)
-        delta_new = delta_ref[...].astype(f32)
-    else:  # B / C: Grow into the (θ, δθ) expansion
-        delta = delta_ref[...].astype(f32)
-        theta_new, delta_new = _grow(theta, delta, upd16)
+        mhat = m_new / bc1
+        upd = -lr * (mhat / (jnp.sqrt(vhat) + eps) + wd_upd * theta)
+        upd16 = _rn(upd)
 
-    theta_out[...] = theta_new.astype(jnp.bfloat16)
-    delta_out[...] = delta_new.astype(jnp.bfloat16)
-    m_out[...] = m_new.astype(jnp.bfloat16)
-    vhi_out[...] = vhi_new.astype(jnp.bfloat16)
-    vlo_out[...] = vlo_new.astype(jnp.bfloat16)
+        if strategy == "A":
+            base = theta
+            if pt_decay:
+                factor = _rn(1.0 - lr * f32(wd))
+                base = _rn(theta * factor)
+            theta_new = _rn(base + upd16)
+            eff = theta_new - theta
+        elif strategy == "SR":
+            i = pl.program_id(0)
+            base_idx = (i * block_rows * LANES).astype(jnp.uint32)
+            row = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 0)
+            col = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 1)
+            idx = base_idx + row * jnp.uint32(LANES) + col
+            noise = bucketing.sr_noise_bits(idx, seed_ref[0, 0])
+            theta_new = bucketing.stochastic_round_bits(theta + upd, noise)
+            eff = theta_new - theta
+        elif strategy == "KAHAN":
+            c = in_refs["delta"][...].astype(f32)
+            upd_c = _rn(upd16 + c)
+            theta_new = _rn(theta + upd_c)
+            c_new = _rn(upd_c - _rn(theta_new - theta))
+            eff = theta_new - theta
+            out_refs["delta"][...] = c_new.astype(jnp.bfloat16)
+        else:  # B / C: Grow Δθ into the (θ, δθ) expansion
+            delta = in_refs["delta"][...].astype(f32)
+            theta_new, delta_new = _grow(theta, delta, upd16)
+            # Δθ̂ per-component (exact in f32; see core.collage._leaf_step)
+            eff = (theta_new - theta) + (delta_new - delta)
+            out_refs["delta"][...] = delta_new.astype(jnp.bfloat16)
+
+        out_refs["theta"][...] = theta_new.astype(jnp.bfloat16)
+        out_refs["m"][...] = m_new.astype(jnp.bfloat16)
+        out_refs["vhi"][...] = vhi_new.astype(jnp.bfloat16)
+
+    if compute_metrics:
+        # partial-reduction epilogue: same tile, zero extra HBM traffic.
+        # det_sum (not jnp.sum) so the accumulation order is pinned and the
+        # partials match the ref oracle bit-for-bit.
+        metrics_ref[0, 0] = bucketing.det_sum(upd * eff)
+        metrics_ref[0, 1] = bucketing.det_sum(upd * upd)
+        metrics_ref[0, 2] = bucketing.det_sum(eff * eff)
+        metrics_ref[0, 3] = bucketing.det_sum(
+            ((jnp.abs(upd) > 0) & (eff == 0)).astype(jnp.float32))
+        metrics_ref[0, 4] = bucketing.det_sum(g * g)
+        for k in range(5, N_PARTIALS):
+            metrics_ref[0, k] = jnp.float32(0.0)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "b1", "b2", "eps", "wd", "strategy", "interpret", "block_rows"))
-def collage_update(g, theta, delta, m, vhi, vlo, lr, bc1, bc2, *,
-                   b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C",
-                   interpret=True, block_rows=BLOCK_ROWS):
-    """Apply the fused update to 1-D bf16 arrays of identical length N
-    (N must be a multiple of 128; the ops.py wrapper pads/flattens)."""
+    "b1", "b2", "eps", "wd", "strategy", "pt_decay", "compute_metrics",
+    "interpret", "block_rows"))
+def collage_bucket_update(state: dict, g, lr, bc1, bc2, seed=None, *,
+                          b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C",
+                          pt_decay=False, compute_metrics=False,
+                          interpret=True, block_rows=BLOCK_ROWS):
+    """Fused update of ONE flat bucket: ``state`` maps the strategy's field
+    names (see ``state_fields``) to 1-D arrays of identical length N
+    (N % 128 == 0 — the bucketing layout pads). Returns ``(new_state,
+    partials)`` where partials is a (5,) f32 metrics vector (dot, ‖Δθ‖²,
+    ‖Δθ̂‖², lost-count, ‖g‖²) or None."""
+    fields = _FIELDS[strategy]
+    assert set(state) == set(fields), (sorted(state), fields)
     n = g.shape[0]
     assert n % LANES == 0, n
     rows = n // LANES
-    br = min(block_rows, rows)
-    while rows % br:
-        br //= 2
+    br = choose_block_rows(rows, block_rows)
     grid = (rows // br,)
 
     def t2(x):
@@ -128,18 +254,59 @@ def collage_update(g, theta, delta, m, vhi, vlo, lr, bc1, bc2, *,
 
     tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
     scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
-    kernel = functools.partial(collage_update_kernel, b1=b1, b2=b2, eps=eps,
-                               wd=wd, strategy=strategy)
-    out_shape = [jax.ShapeDtypeStruct((rows, LANES), jnp.bfloat16)] * 5
+    kernel = functools.partial(
+        collage_update_kernel, b1=b1, b2=b2, eps=eps, wd=wd,
+        strategy=strategy, pt_decay=pt_decay,
+        compute_metrics=compute_metrics, block_rows=br)
+
+    scalars = [jnp.reshape(lr, (1, 1)).astype(jnp.float32),
+               jnp.reshape(bc1, (1, 1)).astype(jnp.float32),
+               jnp.reshape(bc2, (1, 1)).astype(jnp.float32)]
+    if strategy == "SR":
+        assert seed is not None, "SR needs a seed scalar"
+        scalars.append(jnp.reshape(seed, (1, 1)).astype(jnp.uint32))
+    inputs = scalars + [t2(g)] + [t2(state[f]) for f in fields]
+    in_specs = [scal] * len(scalars) + [tile] * (1 + len(fields))
+
+    out_shape = [jax.ShapeDtypeStruct((rows, LANES),
+                                      field_dtype(f, strategy))
+                 for f in fields]
+    out_specs = [tile] * len(fields)
+    if compute_metrics:
+        out_shape.append(
+            jax.ShapeDtypeStruct((grid[0], N_PARTIALS), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, N_PARTIALS), lambda i: (i, 0)))
+
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[scal, scal, scal] + [tile] * 6,
-        out_specs=[tile] * 5,
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(jnp.reshape(lr, (1, 1)).astype(jnp.float32),
-      jnp.reshape(bc1, (1, 1)).astype(jnp.float32),
-      jnp.reshape(bc2, (1, 1)).astype(jnp.float32),
-      t2(g), t2(theta), t2(delta), t2(m), t2(vhi), t2(vlo))
-    return tuple(o.reshape(n) for o in outs)
+    )(*inputs)
+
+    new_state = {f: outs[k].reshape(n) for k, f in enumerate(fields)}
+    partials = None
+    if compute_metrics:
+        # tuple of scalars (not a stacked vector): keeps the steady-state
+        # step free of even scalar-sized concatenate ops
+        rows_out = outs[len(fields)]
+        partials = tuple(bucketing.det_sum(rows_out[:, k]) for k in range(5))
+    return new_state, partials
+
+
+def collage_update(g, theta, delta, m, vhi, vlo, lr, bc1, bc2, *,
+                   b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C",
+                   interpret=True, block_rows=BLOCK_ROWS):
+    """Legacy fixed-signature entrypoint (strategies A/B/C): apply the fused
+    update to 1-D bf16 arrays of identical length N (N % 128 == 0). Unused
+    buffers for the strategy (δθ for A, v-lo for A/B) pass through."""
+    fields = _FIELDS[strategy]
+    full = {"theta": theta, "m": m, "vhi": vhi, "vlo": vlo, "delta": delta}
+    state = {f: full[f] for f in fields}
+    new_state, _ = collage_bucket_update(
+        state, g, lr, bc1, bc2, b1=b1, b2=b2, eps=eps, wd=wd,
+        strategy=strategy, interpret=interpret, block_rows=block_rows)
+    out = dict(full, **new_state)
+    return (out["theta"], out["delta"], out["m"], out["vhi"], out["vlo"])

@@ -1,80 +1,214 @@
-"""jit'd wrapper: flatten the param/opt pytrees → one fused kernel launch.
+"""Bucketed execution engine: one fused launch per persistent flat bucket.
 
 HBM traffic per param (bf16): Collage-plus = 6 reads + 5 writes = 22 B;
 option D's unfused path = 4×4B reads + 3×4B writes = 28 B *plus* the extra
 kernel-launch round-trips of the unfused implementation (each elementwise op
-re-reads its operands). The fused kernel is the Remark 5.2 realization.
+re-reads its operands). The fused kernel is the Remark 5.2 realization — and
+with the bucketing layout (core.bucketing) the flat view is persistent, so
+the steady-state step contains NO concatenate / dynamic_slice of parameter
+buckets at all (asserted on the jaxpr by tests/test_bucketing.py).
+
+Two entrypoints:
+
+  * ``bucketed_step``: the first-class path. Params/optimizer state live as
+    BucketedParams / BucketedOptState; gradients arrive as flat buckets
+    (taking ``jax.grad`` w.r.t. BucketedParams yields them directly). Zero
+    per-step flatten/concat work.
+  * ``fused_step``: tree-compat shim behind ``CollageAdamW.step(use_fused_
+    kernel=True)``. It still flattens/concats the pytree every call (that is
+    what the bucketed path eliminates) but now covers ALL six strategies and
+    returns real StepMetrics from the in-kernel partial-reduction epilogue.
+
+Stochastic rounding uses the engine's counter-based noise stream
+(bucketing.sr_noise_bits) in both entrypoints — deterministic in
+(seed, step, bucket, element), unlike the per-leaf threefry stream of the
+non-fused library path.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.collage import CollageOptState, StepMetrics
+from repro.core import bucketing
+from repro.core.collage import CollageOptState, StepMetrics, bucket_state
 from repro.core.mcf import Expansion
 from repro.core.precision import Strategy
-from repro.kernels.collage_update.collage_update import LANES, collage_update
+from repro.kernels.collage_update import collage_update as cu
+from repro.kernels.collage_update import ref as cu_ref
+
+STRATEGY_CODE = {
+    Strategy.A_BF16: "A",
+    Strategy.B_COLLAGE_LIGHT: "B",
+    Strategy.C_COLLAGE_PLUS: "C",
+    Strategy.KAHAN: "KAHAN",
+    Strategy.SR: "SR",
+    Strategy.D_MINUS_MW: "D-",
+    Strategy.D_MIXED_MW: "D",
+}
+
+# bucket-state field name → BucketedOptState role (theta lives in params)
+_FIELD_ROLE = {"m": "m", "vhi": "vhi", "vlo": "vlo", "delta": "delta",
+               "master": "master"}
 
 
-def _flatten_concat(leaves):
-    flat = [l.reshape(-1) for l in leaves]
-    n = sum(f.shape[0] for f in flat)
-    pad = (-n) % LANES
-    if pad:
-        flat.append(jnp.zeros((pad,), flat[0].dtype))
-    return jnp.concatenate(flat), n
+def _update_one_bucket(opt, state_dict, g, lr, bc1, bc2, seed,
+                       interpret: bool):
+    """Fused update of one flat bucket: Pallas kernel or the bit-identical
+    pure-jnp oracle (same math, same metrics partial tiling)."""
+    code = STRATEGY_CODE[opt.policy.strategy]
+    kw = dict(b1=opt.b1, b2=opt.b2, eps=opt.eps, wd=opt.wd, strategy=code,
+              pt_decay=(opt.policy.wd_mode == "pytorch"),
+              compute_metrics=opt.compute_metrics)
+    if opt.use_fused_kernel:
+        return cu.collage_bucket_update(state_dict, g, lr, bc1, bc2, seed,
+                                        interpret=interpret, **kw)
+    # flat library-semantics path (one fused XLA computation per bucket);
+    # fast metrics sums — equal to the kernel's tiled partials up to f32
+    # summation order (the tiled oracle mode is for bit-identity tests).
+    return cu_ref.collage_bucket_update_ref(state_dict, g, lr, bc1, bc2,
+                                            seed, tiled_metrics=False, **kw)
 
 
-def _split_back(vec, leaves):
-    out, off = [], 0
-    for l in leaves:
-        out.append(jax.lax.dynamic_slice_in_dim(vec, off, l.size, 0)
-                   .reshape(l.shape))
-        off += l.size
-    return out
+def _finalize_metrics(partials_list, total: int) -> StepMetrics:
+    """Combine per-bucket (5,) partials into StepMetrics (Paper Def. 3.3).
 
+    ``total`` is the UNPADDED parameter count — padding lanes contribute
+    exact zeros to every partial, so only the denominator needs care."""
+    dot = un2 = en2 = lost = gn2 = jnp.float32(0.0)
+    for p in partials_list:
+        dot = dot + p[0]
+        un2 = un2 + p[1]
+        en2 = en2 + p[2]
+        lost = lost + p[3]
+        gn2 = gn2 + p[4]
+    un = jnp.sqrt(un2)
+    return StepMetrics(
+        edq=dot / jnp.maximum(un, 1e-30),
+        update_norm=un,
+        effective_norm=jnp.sqrt(en2),
+        imprecision_pct=100.0 * lost / total,
+        grad_norm=jnp.sqrt(gn2))
+
+
+def _zero_metrics() -> StepMetrics:
+    return StepMetrics(*(jnp.zeros((), jnp.float32),) * 5)
+
+
+def _scalars(opt, t):
+    tf = t.astype(jnp.float32)
+    lr = opt.lr(t).astype(jnp.float32)
+    bc1 = 1.0 - jnp.float32(opt.b1) ** tf
+    bc2 = 1.0 - jnp.float32(opt.b2) ** tf
+    return lr, bc1, bc2
+
+
+# --------------------------------------------------------------------------
+# first-class bucketed path: zero per-step flatten/concat
+# --------------------------------------------------------------------------
+
+def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
+                  bstate: bucketing.BucketedOptState):
+    """One optimizer step over persistent buckets.
+
+    ``grads``: BucketedParams (from ``jax.grad`` w.r.t. a BucketedParams) or
+    a bare tuple of flat bucket arrays matching ``bparams.layout``."""
+    s = opt.policy.strategy
+    layout = bparams.layout
+    gdata = grads.data if isinstance(grads, bucketing.BucketedParams) \
+        else tuple(grads)
+    assert len(gdata) == layout.n_buckets
+    t = bstate.step + 1
+    lr, bc1, bc2 = _scalars(opt, t)
+    fields = cu.state_fields(STRATEGY_CODE[s])
+
+    new: dict = {f: [] for f in fields}
+    partials = []
+    for i in range(layout.n_buckets):
+        sd = {"theta": bparams.data[i]}
+        for f in fields:
+            if f != "theta":
+                sd[f] = getattr(bstate, _FIELD_ROLE[f])[i]
+        seed = bucketing.fold_seed(bstate.rng, t, i) if s is Strategy.SR \
+            else None
+        out, part = _update_one_bucket(opt, sd, gdata[i], lr, bc1, bc2,
+                                       seed, opt.kernel_interpret)
+        for f in fields:
+            new[f].append(out[f])
+        if part is not None:
+            partials.append(part)
+
+    metrics = _finalize_metrics(partials, layout.total_size) \
+        if opt.compute_metrics else _zero_metrics()
+    new_state = bucketing.BucketedOptState(
+        step=t, m=tuple(new["m"]), vhi=tuple(new["vhi"]),
+        vlo=tuple(new["vlo"]) if "vlo" in fields else bstate.vlo,
+        delta=tuple(new["delta"]) if "delta" in fields else bstate.delta,
+        master=tuple(new["master"]) if "master" in fields else bstate.master,
+        rng=bstate.rng, layout=layout)
+    new_params = bucketing.BucketedParams(tuple(new["theta"]), layout)
+    return new_params, new_state, metrics
+
+
+# --------------------------------------------------------------------------
+# tree-compat shim (CollageAdamW.step with use_fused_kernel=True)
+# --------------------------------------------------------------------------
 
 def fused_step(opt, grads, params, state: CollageOptState, lr, bc1, bc2,
                interpret: bool = True):
-    """Drop-in replacement for CollageAdamW.step (strategies A/B/C)."""
+    """Drop-in replacement for CollageAdamW.step — all six strategies.
+
+    Re-flattens the pytrees every call (the cost ``bucketed_step`` removes);
+    kept as the migration path for tree-shaped TrainStates."""
     s = opt.policy.strategy
-    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-    leaves_p = treedef.flatten_up_to(params)
-    leaves_m = treedef.flatten_up_to(state.m)
-    leaves_v = treedef.flatten_up_to(state.v)
-    leaves_d = (treedef.flatten_up_to(state.delta)
-                if state.delta is not None else
-                [jnp.zeros_like(p) for p in leaves_p])
+    bp = opt.policy.bucketing
+    layout = bucketing.build_layout(params,
+                                    max_bucket_elems=bp.max_bucket_elems,
+                                    pad_multiple=bp.pad_multiple)
+    t = state.step + 1
+    code = STRATEGY_CODE[s]
+    fields = cu.state_fields(code)
 
-    g, _ = _flatten_concat(leaves_g)
-    th, _ = _flatten_concat(leaves_p)
-    de, _ = _flatten_concat(leaves_d)
-    m, _ = _flatten_concat(leaves_m)
-    if s is Strategy.C_COLLAGE_PLUS:
-        vhi, _ = _flatten_concat([v.hi for v in leaves_v])
-        vlo, _ = _flatten_concat([v.lo for v in leaves_v])
+    # one shared definition of role→bucket rules (dtype, hi/lo split):
+    # bucket_state is also what init_bucketed / checkpoint migration use
+    b_params, b_state = bucket_state(state, params, layout, opt.policy)
+    buckets = {"theta": b_params.data, "m": b_state.m, "vhi": b_state.vhi,
+               "vlo": b_state.vlo, "delta": b_state.delta,
+               "master": b_state.master}
+    g_buckets = bucketing.bucket_tree(grads, layout)
+    seed_base = None
+    if s is Strategy.SR:
+        seed_base = bucketing.fold_seed(state.rng[0] ^ state.rng[1])
+
+    new: dict = {f: [] for f in fields}
+    partials = []
+    for i in range(layout.n_buckets):
+        sd = {f: buckets[f][i] for f in fields}
+        seed = bucketing.fold_seed(seed_base, t, i) \
+            if seed_base is not None else None
+        out, part = _update_one_bucket(opt, sd, g_buckets[i],
+                                       lr, bc1, bc2, seed, interpret)
+        for f in fields:
+            new[f].append(out[f])
+        if part is not None:
+            partials.append(part)
+
+    unflat = layout.treedef.unflatten
+    new_p = bucketing.unbucket(new["theta"], layout)
+    new_m = bucketing.unbucket(new["m"], layout)
+    if s.uses_expansion_second_moment:
+        his = bucketing.unbucket_leaves(new["vhi"], layout)
+        los = bucketing.unbucket_leaves(new["vlo"], layout)
+        new_v = unflat([Expansion(h, l) for h, l in zip(his, los)])
     else:
-        vhi, _ = _flatten_concat(leaves_v)
-        vlo = jnp.zeros_like(vhi)
+        new_v = bucketing.unbucket(new["vhi"], layout)
+    new_d = bucketing.unbucket(new["delta"], layout) \
+        if "delta" in fields else None
+    new_w = bucketing.unbucket(new["master"], layout) \
+        if "master" in fields else None
+    new_rng = jax.random.fold_in(state.rng, t) if s is Strategy.SR else None
 
-    strat_code = {Strategy.A_BF16: "A", Strategy.B_COLLAGE_LIGHT: "B",
-                  Strategy.C_COLLAGE_PLUS: "C"}[s]
-    th2, de2, m2, vhi2, vlo2 = collage_update(
-        g, th, de, m, vhi, vlo, lr, bc1, bc2,
-        b1=opt.b1, b2=opt.b2, eps=opt.eps, wd=opt.wd,
-        strategy=strat_code, interpret=interpret)
-
-    new_p = treedef.unflatten(_split_back(th2, leaves_p))
-    new_m = treedef.unflatten(_split_back(m2, leaves_m))
-    if s is Strategy.C_COLLAGE_PLUS:
-        his = _split_back(vhi2, leaves_p)
-        los = _split_back(vlo2, leaves_p)
-        new_v = treedef.unflatten([Expansion(h, l) for h, l in zip(his, los)])
-    else:
-        new_v = treedef.unflatten(_split_back(vhi2, leaves_p))
-    new_d = treedef.unflatten(_split_back(de2, leaves_p)) \
-        if state.delta is not None else None
-    new_state = CollageOptState(step=state.step + 1, m=new_m, v=new_v,
-                                delta=new_d, master=None, rng=None)
-    zeros = jnp.zeros((), jnp.float32)
-    return new_p, new_state, StepMetrics(zeros, zeros, zeros, zeros, zeros)
+    metrics = _finalize_metrics(partials, layout.total_size) \
+        if opt.compute_metrics else _zero_metrics()
+    new_state = CollageOptState(step=t, m=new_m, v=new_v, delta=new_d,
+                                master=new_w, rng=new_rng)
+    return new_p, new_state, metrics

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ShapeConfig
 from repro.core.collage import CollageAdamW, cosine_schedule
-from repro.core.precision import PrecisionPolicy, parse_strategy
+from repro.core.precision import BucketPolicy, PrecisionPolicy, parse_strategy
 from repro.data.synthetic import make_batch_fn
 from repro.models.model import build_model
 from repro.train import checkpoint as ckpt_lib
@@ -28,12 +28,13 @@ def build(args):
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
     model = build_model(cfg)
-    policy = PrecisionPolicy(strategy=parse_strategy(args.precision))
+    policy = PrecisionPolicy(strategy=parse_strategy(args.precision),
+                             bucketing=BucketPolicy(enabled=args.bucketed))
     opt = CollageAdamW(
         cosine_schedule(args.lr, args.warmup, args.steps),
         b1=0.9, b2=args.b2, weight_decay=args.weight_decay, policy=policy,
         compute_metrics=not args.no_metrics,
-        use_fused_kernel=args.fused_kernel)
+        use_fused_kernel=args.fused_kernel, sr_seed=args.sr_seed)
     step_fn = jax.jit(train_loop.make_train_step(
         model, opt, microbatch=args.microbatch, remat=args.remat,
         grad_compression=args.grad_compression))
@@ -56,6 +57,10 @@ def main(argv=None):
     ap.add_argument("--remat", default="none")
     ap.add_argument("--grad-compression", default="none")
     ap.add_argument("--fused-kernel", action="store_true")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="persistent flat-bucket params/opt-state (DESIGN.md §5)")
+    ap.add_argument("--sr-seed", type=int, default=0,
+                    help="stochastic-rounding noise seed (--precision SR)")
     ap.add_argument("--no-metrics", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -73,7 +78,8 @@ def main(argv=None):
     if args.resume:
         latest = ckpt_lib.latest_step(args.ckpt_dir)
         if latest is not None:
-            state, extra = ckpt_lib.restore(args.ckpt_dir, latest, state)
+            state, extra = ckpt_lib.restore_bucketed(args.ckpt_dir, latest,
+                                                     state)
             start = extra["step"]
             print(f"resumed from step {start}")
 

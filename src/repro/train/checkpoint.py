@@ -13,6 +13,11 @@ Design (scaled-down but production-shaped — see DESIGN.md §4):
   * data-iterator state = the step counter (the synthetic corpus is
     counter-based), so resume is bitwise-identical (tested).
   * ``keep_last`` GC + ``latest`` pointer file for restart discovery.
+  * bucketed TrainStates (core.bucketing, DESIGN.md §5) save their
+    BucketLayout into the manifest; ``restore_bucketed`` migrates a
+    checkpoint written under a DIFFERENT bucket partitioning (size cap /
+    pad multiple changed between runs) onto the template's layout —
+    bit-exactly, via unbucket→rebucket of every role array.
 """
 from __future__ import annotations
 
@@ -25,7 +30,27 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.core import bucketing
+
 _SEP = "/"
+
+
+def _find_layout(tree: Any) -> Optional[bucketing.BucketLayout]:
+    """First BucketLayout found in a pytree (all bucketed nodes of one
+    TrainState share the same layout)."""
+    found: list = []
+
+    def is_bucketed(x):
+        return isinstance(x, (bucketing.BucketedParams,
+                              bucketing.BucketedOptState))
+
+    def visit(x):
+        if is_bucketed(x):
+            found.append(x.layout)
+        return x
+
+    jax.tree_util.tree_map(visit, tree, is_leaf=is_bucketed)
+    return found[0] if found else None
 
 
 def _flatten(tree: Any):
@@ -49,6 +74,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep_last: int = 3,
 
     flat, _ = _flatten(tree)
     manifest = {"step": step, "arrays": {}, "extra": extra or {}}
+    layout = _find_layout(tree)
+    if layout is not None:
+        manifest["extra"]["bucket_layout"] = layout.to_json()
     arrays = {}
     for i, (name, leaf) in enumerate(flat):
         arr = np.asarray(jax.device_get(leaf))
@@ -102,8 +130,15 @@ def restore(ckpt_dir: str, step: int, template: Any,
     data = np.load(os.path.join(d, "arrays.npz"))
 
     flat_t, treedef = _flatten(template)
+    hint = ""
+    if len(flat_t) != len(manifest["arrays"]) \
+            and "bucket_layout" in manifest.get("extra", {}) \
+            and _find_layout(template) is None:
+        hint = (" — checkpoint holds a BUCKETED state; resume with "
+                "bucketing enabled (--bucketed) or restore_bucketed()")
     assert len(flat_t) == len(manifest["arrays"]), \
-        f"checkpoint has {len(manifest['arrays'])} leaves, template {len(flat_t)}"
+        f"checkpoint has {len(manifest['arrays'])} leaves, " \
+        f"template {len(flat_t)}{hint}"
     import ml_dtypes
     leaves = []
     for i, (name, t_leaf) in enumerate(flat_t):
@@ -129,6 +164,25 @@ def restore(ckpt_dir: str, step: int, template: Any,
             leaves.append(jax.numpy.asarray(arr, dtype=t_leaf.dtype))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, manifest["extra"]
+
+
+def restore_bucketed(ckpt_dir: str, step: int, template: Any,
+                     *, verify: bool = True) -> tuple[Any, dict]:
+    """Layout-elastic restore: like ``restore``, but if the checkpoint was
+    written under a different bucket partitioning than ``template``'s, the
+    arrays are loaded with the STORED layout and then migrated bucket-wise
+    onto the template layout (values bit-exact; params structure must
+    match). Falls back to plain ``restore`` for tree-layout checkpoints."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    stored = manifest["extra"].get("bucket_layout")
+    layout = _find_layout(template)
+    if stored is None or layout is None or stored == layout.to_json():
+        return restore(ckpt_dir, step, template, verify=verify)
+    old_layout = bucketing.BucketLayout.from_json(stored, layout.treedef)
+    old_template = bucketing.state_template_for_layout(template, old_layout)
+    tree, extra = restore(ckpt_dir, step, old_template, verify=verify)
+    return bucketing.migrate(tree, layout), extra
 
 
 def _gc(ckpt_dir: str, keep_last: int):

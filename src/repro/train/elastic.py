@@ -77,7 +77,10 @@ class RunSupervisor:
                 restore_step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
                 if restore_step is None:
                     raise RuntimeError("fault before first checkpoint") from e
-                state, extra = ckpt_lib.restore(
+                # layout-elastic: migrates bucketed states whose bucket
+                # partitioning changed with the re-scaled mesh (no-op for
+                # tree-layout states)
+                state, extra = ckpt_lib.restore_bucketed(
                     self.cfg.ckpt_dir, restore_step, template or state)
                 step = extra["step"]
                 self.recoveries.append(step)

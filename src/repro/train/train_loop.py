@@ -4,6 +4,16 @@ accumulation, remat, optional compressed gradient all-reduce, metrics.
 The step function is pure (TrainState → TrainState) and jit/pjit-friendly —
 the same function is used by the CPU examples, the distributed launcher and
 the multi-pod dry-run.
+
+Two parameter layouts are supported transparently (DESIGN.md §5):
+
+  * tree layout: ``TrainState.params`` is the model pytree, optimizer state
+    is a per-leaf CollageOptState — the reference path.
+  * bucket layout (``opt.policy.bucketing.enabled``): params and ALL
+    optimizer state persist as flat buckets (core.bucketing). The loss is
+    computed against ``params.tree()`` — the only place leaf views are
+    materialized — so ``jax.grad`` yields flat gradient buckets and the
+    optimizer step runs with zero per-step flatten/concat traffic.
 """
 from __future__ import annotations
 
@@ -14,6 +24,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing
 from repro.core.collage import CollageAdamW, CollageOptState, StepMetrics
 from repro.distributed import compression
 from repro.models.model import Model
@@ -22,8 +33,8 @@ from repro.models.model import Model
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class TrainState:
-    params: Any
-    opt_state: CollageOptState
+    params: Any                      # model pytree OR BucketedParams
+    opt_state: Any                   # CollageOptState OR BucketedOptState
     grad_err: Optional[Any]          # error-feedback residual (compression)
 
     def tree_flatten(self):
@@ -37,7 +48,10 @@ class TrainState:
 def init_state(model: Model, opt: CollageAdamW, key,
                grad_compression: str = "none") -> TrainState:
     params = model.init(key)
-    opt_state = opt.init(params)
+    if opt.policy.bucketing.enabled:
+        params, opt_state = opt.init_bucketed(params)
+    else:
+        opt_state = opt.init(params)
     err = compression.init_error_state(params) \
         if grad_compression.endswith("_ef") else None
     return TrainState(params, opt_state, err)
@@ -58,6 +72,9 @@ def make_train_step(model: Model, opt: CollageAdamW, *,
     """
 
     def loss_fn(params, batch):
+        if isinstance(params, bucketing.BucketedParams):
+            # model-apply boundary: the ONLY place bucket views materialize
+            return model.loss(params.tree(), batch, remat=remat)
         return model.loss(params, batch, remat=remat)
 
     def grads_of(params, batch):
@@ -107,8 +124,12 @@ def make_train_step(model: Model, opt: CollageAdamW, *,
                 grad_err = state.grad_err
         if psum_axis is not None:
             grads = jax.lax.pmean(grads, psum_axis)
-        params, opt_state, ometrics = opt.step(grads, state.params,
-                                               state.opt_state)
+        if isinstance(state.params, bucketing.BucketedParams):
+            params, opt_state, ometrics = opt.step_bucketed(
+                grads, state.params, state.opt_state)
+        else:
+            params, opt_state, ometrics = opt.step(grads, state.params,
+                                                   state.opt_state)
         metrics = {"loss": loss, **lmetrics,
                    "edq": ometrics.edq, "update_norm": ometrics.update_norm,
                    "imprecision_pct": ometrics.imprecision_pct,
@@ -120,6 +141,8 @@ def make_train_step(model: Model, opt: CollageAdamW, *,
 
 def make_eval_step(model: Model) -> Callable:
     def eval_step(params, batch):
+        if isinstance(params, bucketing.BucketedParams):
+            params = params.tree()
         loss, metrics = model.loss(params, batch)
         return metrics
     return eval_step

@@ -205,6 +205,27 @@ class TestStochasticRounding:
         # SR must move parameters (unlike frozen option A)
         assert not np.array_equal(np.asarray(params["w"]), np.asarray(theta0))
 
+    def test_sr_seed_configurable(self):
+        """Regression: init/convert_state hard-coded PRNGKey(0), so every
+        migrated run silently replayed the identical rounding noise."""
+        theta0 = jnp.full((4096,), 200.0, jnp.bfloat16)
+        grads = _grad_seq(20, shape=(4096,), seed=4, scale=1e-2)
+        p0, _, _, _ = _run(Strategy.SR, grads, theta0, sr_seed=0)
+        p0b, _, _, _ = _run(Strategy.SR, grads, theta0, sr_seed=0)
+        p7, _, _, _ = _run(Strategy.SR, grads, theta0, sr_seed=7)
+        np.testing.assert_array_equal(np.asarray(p0["w"]), np.asarray(p0b["w"]))
+        assert not np.array_equal(np.asarray(p0["w"]), np.asarray(p7["w"]))
+
+    def test_convert_state_sr_seed(self):
+        from repro.core.collage import convert_state
+        theta0 = jnp.full((256,), 100.0, jnp.bfloat16)
+        grads = _grad_seq(5, shape=(256,), seed=6)
+        pd, sd, _, _ = _run(Strategy.D_MIXED_MW, grads, theta0)
+        pol = PrecisionPolicy(strategy=Strategy.SR)
+        s_a = convert_state(sd, pd, pol, sr_seed=1)
+        s_b = convert_state(sd, pd, pol, sr_seed=2)
+        assert not np.array_equal(np.asarray(s_a.rng), np.asarray(s_b.rng))
+
 
 def test_cosine_schedule():
     sched = cosine_schedule(6e-4, warmup=200, total=2000)
