@@ -1,0 +1,165 @@
+"""Decode benchmark: per-token Python loop vs the jit-resident engine.
+
+Measures steady-state tok/s for three drivers on a CPU-smoke model:
+
+  * python_loop      — the pre-engine serve path: one jitted decode_step per
+                       token, NON-donated state (a fresh KV-cache allocation
+                       every token) + host-side sampling.
+  * donated_step     — same per-token dispatch but with the DecodeState
+                       donated (the buffers alias in place).
+  * engine           — Model.generate: prefill + lax.scan over tokens with
+                       in-jit sampling, ONE device program per request batch.
+
+Also asserts the engine's zero-per-step-allocation property: the compiled
+program's temp arena must not grow with the number of generated tokens
+(the scan carry is double-buffered once, not per token), and the donated
+step must alias its cache buffers.
+
+  PYTHONPATH=src python -m benchmarks.decode [--quick]
+
+Emits BENCH_decode.json.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticCorpus
+from repro.models.model import build_model
+
+
+def _cache_bytes(state) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))
+
+
+def make_python_loop(model, params, batch, gen: int, cache_len: int,
+                     donate: bool):
+    """The legacy serve path: per-token dispatch; optional donation. The jit
+    wrappers are built ONCE so timed calls measure decode, not retracing."""
+    prefill = jax.jit(functools.partial(model.prefill, cache_len=cache_len))
+    step = jax.jit(model.decode_step, donate_argnums=(1,) if donate else ())
+
+    def run():
+        logits, state = prefill(params, batch)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for _ in range(gen - 1):
+            logits, state = step(params, state, tok)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        return jnp.concatenate(out, axis=1)
+
+    return run
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt-tiny")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.gen, args.reps = 32, 2
+
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(cfg.vocab_size, args.prompt_len, args.batch)
+    batch = {"tokens": corpus.batch_at(0)["tokens"]}
+    B, T, G = args.batch, args.prompt_len, args.gen
+    cache_len = T + G
+    n_tok = B * G
+    results = {"arch": cfg.name, "batch": B, "prompt_len": T, "gen": G}
+
+    # --- python per-token loop, non-donated (the pre-engine baseline) -----
+    for name, donate in (("python_loop", False), ("donated_step", True)):
+        run = make_python_loop(model, params, batch, G, cache_len, donate)
+        run()                                       # compile + warm
+        best = float("inf")
+        for _ in range(args.reps):
+            t0 = time.time()
+            run()
+            best = min(best, time.time() - t0)
+        results[name] = {"tok_s": n_tok / best, "seconds": best}
+
+    # donation assertion: the per-token step must alias its cache buffers
+    state_abs = jax.eval_shape(lambda: model.init_decode_state(B, cache_len))
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    donated = jax.jit(model.decode_step, donate_argnums=(1,)).lower(
+        params_abs, state_abs, tok_abs).compile()
+    alias = int(donated.memory_analysis().alias_size_in_bytes)
+    cache_sz = _cache_bytes(state_abs)
+    assert alias >= cache_sz, (
+        f"donated decode_step aliases only {alias} B < cache {cache_sz} B")
+    results["donated_step"]["alias_bytes"] = alias
+    results["cache_bytes"] = cache_sz
+
+    # --- jit-resident engine ---------------------------------------------
+    gen_fn = jax.jit(functools.partial(model.generate, max_new_tokens=G))
+    toks_engine, _ = gen_fn(params, batch)          # compile + warm
+    jax.block_until_ready(toks_engine)
+    best = float("inf")
+    for _ in range(args.reps):
+        t0 = time.time()
+        out, _ = gen_fn(params, batch)
+        jax.block_until_ready(out)
+        best = min(best, time.time() - t0)
+    results["engine"] = {"tok_s": n_tok / best, "seconds": best}
+
+    # steady-state allocation: the temp arena must not scale with gen length
+    # (per-step cache reallocation would make it O(gen · cache_bytes))
+    def temp_bytes(g):
+        fn = jax.jit(functools.partial(model.generate, max_new_tokens=g,
+                                       cache_len=T + G))
+        c = fn.lower(params_abs,
+                     {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+                     ).compile()
+        return int(c.memory_analysis().temp_size_in_bytes)
+
+    t_short, t_long = temp_bytes(G // 4), temp_bytes(G)
+    growth = t_long - t_short
+    per_step_cap = (G - G // 4) * cache_sz
+    assert growth < 0.5 * per_step_cap, (
+        f"temp arena grew {growth} B over {G - G // 4} extra steps — "
+        f"looks like per-step cache reallocation ({cache_sz} B/cache)")
+    results["temp_bytes_short"] = t_short
+    results["temp_bytes_long"] = t_long
+
+    # correctness: engine greedy tokens == python-loop greedy tokens
+    toks_py = make_python_loop(model, params, batch, G, cache_len, False)()
+    assert (toks_engine == toks_py).all(), "engine != python loop tokens"
+
+    speedup = results["engine"]["tok_s"] / results["python_loop"]["tok_s"]
+    results["engine_vs_python_speedup"] = speedup
+    assert speedup > 1.0, (
+        f"jit-resident engine ({results['engine']['tok_s']:.1f} tok/s) did "
+        f"not beat the python loop "
+        f"({results['python_loop']['tok_s']:.1f} tok/s)")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"python loop   : {results['python_loop']['tok_s']:10.1f} tok/s")
+    print(f"donated step  : {results['donated_step']['tok_s']:10.1f} tok/s")
+    print(f"engine        : {results['engine']['tok_s']:10.1f} tok/s "
+          f"({speedup:.1f}x vs python loop)")
+    print(f"temp arena    : {t_short} B @ gen={G//4}  →  {t_long} B @ gen={G} "
+          f"(no per-step reallocation)")
+    print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

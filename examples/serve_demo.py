@@ -1,12 +1,18 @@
-"""Serving demo: batched prefill + KV-cache decode on the RWKV6 (O(1) state)
-and granite (GQA KV cache) smoke models.
+"""Serving demo: the jit-resident generation engine on three contrasting
+smoke models — granite (GQA KV cache, ragged power-of-two prompt buckets),
+RWKV6 (O(1) recurrent state, exact-length batching), and internvl2 (VLM:
+the patch prefix shifts every cache position — handled inside the model).
 
   PYTHONPATH=src python examples/serve_demo.py
 """
 from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
-    for arch in ("granite-3-2b", "rwkv6-1.6b"):
+    for arch, extra in (
+            ("granite-3-2b", ["--temperature", "0.8", "--top-k", "40"]),
+            ("rwkv6-1.6b", []),
+            ("internvl2-1b", [])):
         print(f"=== {arch} (smoke config) ===")
-        serve_main(["--arch", arch, "--smoke", "--batch", "4",
-                    "--prompt-len", "32", "--gen", "16"])
+        serve_main(["--arch", arch, "--smoke", "--requests", "6",
+                    "--batch", "4", "--prompt-len", "32", "--gen", "16",
+                    *extra])

@@ -187,7 +187,8 @@ def batch_shardings(abstract_batch: Any, mesh: Mesh) -> Any:
 
 def cache_shardings(abstract_caches: Any, mesh: Mesh,
                     context_parallel: bool = False) -> Any:
-    """KV caches: batch over dp, heads/channels over model. When
+    """DecodeState / KV-cache shardings: batch over dp, heads/channels over
+    model; the per-row position vector co-shards with the batch rows. When
     ``context_parallel`` (long_500k, batch=1): cache LENGTH over "data"."""
     dp = _dp_axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -197,6 +198,9 @@ def cache_shardings(abstract_caches: Any, mesh: Mesh,
 
     def leaf_fn(path, leaf):
         name = _last_name(path)
+        if name == "pos" and leaf.ndim == 1:        # DecodeState.pos (B,)
+            bshard = dp if leaf.shape[0] % n_dp == 0 else None
+            return NamedSharding(mesh, P(bshard))
         bdim = leaf.shape[1] if leaf.ndim > 1 else 1
         bshard = dp if (leaf.ndim > 1 and bdim % n_dp == 0) else None
         if name in ("k", "v") and leaf.ndim == 5:   # (layers, B, S, hk, dh)

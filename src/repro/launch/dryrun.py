@@ -160,22 +160,19 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
                                                   tp_mode)
             specs = model.input_specs(shape)
             ctx_par = shape.global_batch < n_dp
-            caches_sh = shard_lib.cache_shardings(specs["caches"], mesh,
-                                                  context_parallel=ctx_par)
+            state_sh = shard_lib.cache_shardings(specs["state"], mesh,
+                                                 context_parallel=ctx_par)
             tok_sh = shard_lib.batch_shardings(
                 {"token": specs["token"]}, mesh)["token"]
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            pos_sh = NamedSharding(mesh, P())
 
-            def serve_step(params, caches, token, pos):
-                return model.decode_step(params, caches, token, pos)
+            def serve_step(params, state, token):
+                return model.decode_step(params, state, token)
 
             jitted = jax.jit(serve_step,
-                             in_shardings=(params_sh, caches_sh, tok_sh, pos_sh),
-                             out_shardings=(None, caches_sh),
+                             in_shardings=(params_sh, state_sh, tok_sh),
+                             out_shardings=(None, state_sh),
                              donate_argnums=(1,))
-            lowered = jitted.lower(params_abs, specs["caches"],
-                                   specs["token"], specs["pos"])
+            lowered = jitted.lower(params_abs, specs["state"], specs["token"])
             meta = {"context_parallel": bool(ctx_par)}
         t0 = time.time()
         compiled = lowered.compile()

@@ -1,79 +1,243 @@
-"""Serving launcher: batched prefill + decode with KV/state caches.
+"""Serving launcher: jit-resident generation engine with request batching.
+
+The engine (DESIGN.md §6) wraps ``Model.generate`` — the whole decode loop
+(prefill + lax.scan over tokens + in-jit sampling) is ONE jitted program
+per (batch, prompt-bucket, gen-length) shape, with the DecodeState donated
+between calls' scan iterations. Ragged requests are grouped and padded to
+power-of-two prompt buckets (exact lengths for recurrent-state archs, whose
+states would ingest pad tokens), so the compile count stays bounded while
+arbitrary-length traffic is served.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
-      --batch 4 --prompt-len 32 --gen 32
+      --requests 16 --gen 32 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from functools import partial
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticCorpus
-from repro.models.model import build_model
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a token prompt (+ precomputed frontend
+    embeddings for VLM/enc-dec archs)."""
+
+    tokens: np.ndarray                       # (L,) int32
+    frontend: Optional[np.ndarray] = None    # (F, D) model dtype
+
+
+def _bucket_len(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class GenerationEngine:
+    """Batched serving driver over a jitted ``Model.generate``.
+
+    Requests are sorted by prompt length and grouped into batches of
+    ``max_batch``; each batch is right-padded to a power-of-two prompt
+    bucket and generated in one device program with per-row ``prompt_lens``
+    (the model's internal position bookkeeping handles the ragged rows and
+    any frontend prefix). Compiled executables are cached per shape.
+
+    ``params`` may be a plain pytree OR core.bucketing.BucketedParams — a
+    Collage-trained bucketed checkpoint serves directly, no fp32
+    materialization (the leaf views materialize inside the jitted program).
+    """
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 temperature: float = 0.0, top_k: int = 0, pad_id: int = 0,
+                 pad_batches: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.seed = seed
+        self._calls = 0            # advances the default sampling stream
+        self.max_batch = max_batch
+        # read-only: sampling config is baked into the cached traces
+        self._temperature = float(temperature)
+        self._top_k = int(top_k)
+        self.pad_id = pad_id
+        # pad residual groups (B < max_batch) with dummy rows so every call
+        # shares the (max_batch, bucket) shape — one compile per
+        # (bucket, gen), not one per distinct residual size
+        self.pad_batches = pad_batches
+        self._exact_lens = model._has_recurrent_state()
+        self._needs_frontend = (model.cfg.family == "vlm"
+                                or model.cfg.is_encdec)
+        self._fns: dict = {}
+        self.stats = {"batches": 0, "tokens": 0, "traces": 0}
+
+    @property
+    def temperature(self) -> float:
+        """Sampling config is trace-baked: build a new engine to change it
+        (mutating an attribute would silently not affect cached traces)."""
+        return self._temperature
+
+    @property
+    def top_k(self) -> int:
+        return self._top_k
+
+    def _fn(self, max_new: int):
+        fn = self._fns.get(max_new)
+        if fn is None:
+            def counted(params, batch, key, prompt_lens=None, *, _n=max_new):
+                self.stats["traces"] += 1    # Python side effect: runs only
+                #                              when jit actually re-traces
+                return self.model.generate(
+                    params, batch, _n, key=key,
+                    temperature=self._temperature, top_k=self._top_k,
+                    prompt_lens=prompt_lens)
+            fn = jax.jit(counted)
+            self._fns[max_new] = fn
+        return fn
+
+    @property
+    def compile_count(self) -> int:
+        """Traced program count — one per (gen length × batch ×
+        prompt-bucket × raggedness) shape; the health signal that request
+        bucketing is bounding compiles under arbitrary traffic."""
+        return self.stats["traces"]
+
+    def _group(self, order: Sequence[int], reqs: Sequence[Request]):
+        """Batches of ≤ max_batch indices sharing a prompt bucket."""
+        groups, cur, cur_bucket = [], [], None
+        for i in order:
+            n = len(reqs[i].tokens)
+            b = n if self._exact_lens else _bucket_len(n)
+            if cur and (b != cur_bucket or len(cur) == self.max_batch):
+                groups.append((cur_bucket, cur))
+                cur = []
+            if not cur:
+                cur_bucket = b
+            cur.append(i)
+        if cur:
+            groups.append((cur_bucket, cur))
+        return groups
+
+    def generate(self, requests: Sequence[Request], max_new_tokens: int,
+                 key=None) -> list[np.ndarray]:
+        """Serve a list of ragged requests; returns per-request generated
+        token arrays (max_new_tokens,), in the input order.
+
+        Without an explicit ``key`` the sampling stream advances per call
+        (folding a call counter into the engine seed), so repeated traffic
+        gets fresh noise; pass a key to reproduce a specific batch."""
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                     self._calls)
+        self._calls += 1
+        for i, r in enumerate(requests):
+            if self._needs_frontend and r.frontend is None:
+                raise ValueError(
+                    f"request {i}: {self.model.cfg.name} requires frontend "
+                    "embeddings on every request")
+            if not self._needs_frontend and r.frontend is not None:
+                raise ValueError(
+                    f"request {i}: frontend given for a text-only arch")
+        order = sorted(range(len(requests)),
+                       key=lambda i: len(requests[i].tokens))
+        out: list = [None] * len(requests)
+        pending = []
+        for gi, (bucket, idxs) in enumerate(self._group(order, requests)):
+            B = len(idxs)
+            Bp = self.max_batch if self.pad_batches else B
+            toks = np.full((Bp, bucket), self.pad_id, np.int32)
+            lens = np.full((Bp,), bucket, np.int32)   # dummy rows full-length
+            for r, i in enumerate(idxs):
+                t = np.asarray(requests[i].tokens, np.int32)
+                toks[r, :len(t)] = t
+                lens[r] = len(t)
+            batch = {"tokens": jnp.asarray(toks)}
+            if self._needs_frontend:
+                fes = [jnp.asarray(requests[i].frontend) for i in idxs]
+                fes += [jnp.zeros_like(fes[0])] * (Bp - B)
+                batch["frontend"] = jnp.stack(fes)
+            ragged = None if (lens == bucket).all() else jnp.asarray(lens)
+            gen, _ = self._fn(max_new_tokens)(
+                self.params, batch, key=jax.random.fold_in(key, gi),
+                prompt_lens=ragged)
+            pending.append((idxs, gen))   # host-sync AFTER all groups are
+            #                               dispatched — keeps XLA's async
+            #                               dispatch pipelining the groups
+            self.stats["batches"] += 1
+            self.stats["tokens"] += B * max_new_tokens
+        for idxs, gen in pending:
+            gen = np.asarray(gen)
+            for r, i in enumerate(idxs):
+                out[i] = gen[r]
+        return out
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-tiny")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of ragged requests to simulate")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="engine max batch size")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max simulated prompt length")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    corpus = SyntheticCorpus(cfg.vocab_size, args.prompt_len, args.batch,
-                             seed=args.seed)
-    batch = corpus.batch_at(0)
+    corpus = SyntheticCorpus(cfg.vocab_size, args.prompt_len,
+                             max(args.requests, 1), seed=args.seed)
+    toks = np.asarray(corpus.batch_at(0)["tokens"])
+    fe_all = None
     if cfg.is_encdec or cfg.family == "vlm":
-        batch["frontend"] = corpus.frontend_at(0, cfg.d_model,
-                                               cfg.frontend_len,
-                                               jnp.dtype(cfg.dtype))
-    cache_len = args.prompt_len + args.gen
+        fe_all = np.asarray(corpus.frontend_at(
+            0, cfg.d_model, cfg.frontend_len, jnp.dtype(cfg.dtype)))
+    rng = np.random.default_rng(args.seed)
+    lo = max(args.prompt_len // 2, 1)
+    requests = []
+    for i in range(args.requests):
+        n = int(rng.integers(lo, args.prompt_len + 1))
+        if model._has_recurrent_state():
+            n = args.prompt_len          # exact-length batching demo
+        fe = None if fe_all is None else fe_all[i]
+        requests.append(Request(tokens=toks[i, :n], frontend=fe))
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-    decode = jax.jit(model.decode_step)
-
+    engine = GenerationEngine(model, params, max_batch=args.batch,
+                              temperature=args.temperature, top_k=args.top_k)
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    def sample(logits, key):
-        if args.temperature <= 0:
-            return jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        return jax.random.categorical(
-            key, logits[:, -1] / args.temperature, axis=-1)[:, None]
-
-    key = jax.random.PRNGKey(args.seed + 1)
-    tok = sample(logits, key).astype(jnp.int32)
-    out_tokens = [tok]
+    outs = engine.generate(requests, args.gen,
+                           key=jax.random.PRNGKey(args.seed + 1))
+    t_warm = time.time() - t0
     t0 = time.time()
-    for i in range(args.gen - 1):
-        key, sub = jax.random.split(key)
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(args.prompt_len + i))
-        tok = sample(logits, sub).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms")
-    print(f"decode:  {args.gen - 1} steps x batch {args.batch} in "
-          f"{t_decode*1e3:.1f} ms "
-          f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    outs = engine.generate(requests, args.gen,
+                           key=jax.random.PRNGKey(args.seed + 1))
+    t_serve = time.time() - t0
+    n_tok = args.requests * args.gen
+    print(f"engine: {args.requests} requests (ragged prompts ≤ "
+          f"{args.prompt_len}) × {args.gen} new tokens")
+    print(f"  warmup (incl. {engine.compile_count} compiles): "
+          f"{t_warm*1e3:.1f} ms")
+    print(f"  steady-state: {t_serve*1e3:.1f} ms "
+          f"({n_tok / max(t_serve, 1e-9):.1f} tok/s)")
     print("sample generations (token ids):")
-    for row in list(gen[:2]):
-        print("  ", [int(t) for t in row[:16]])
-    return gen
+    for o in outs[:2]:
+        print("  ", [int(t) for t in o[:16]])
+    return outs
 
 
 if __name__ == "__main__":

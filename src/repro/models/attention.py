@@ -191,22 +191,25 @@ def flash_attention(p, x, cfg, *, causal=True, window=0, positions=None,
 def decode_attention(p, x, cfg, cache, pos, *, window=0):
     """One-token decode: x (B,1,D); cache {"k","v"}: (B, S, Hk, dh).
 
-    Writes the new K/V at ``pos`` then attends over the first pos+1 entries
-    (masked). For local layers only the last ``window`` positions score."""
+    ``pos`` is the per-row cache write position — scalar or (B,) i32 (ragged
+    prompts decode at different true positions; VLM rows are offset by the
+    patch-prefix length). Writes the new K/V at ``pos[b]`` then attends over
+    the first pos[b]+1 entries (masked). For local layers only the last
+    ``window`` positions score."""
     B = x.shape[0]
     S = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]                         # (B, 1)
     q, k_new, v_new = _qkv(p, x, x, cfg, positions, positions)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, pos, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, pos, 0, 0))
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
     scores = _gqa_scores(q, k, cfg)                  # (B,hk,g,1,S)
-    kj = jnp.arange(S)[None, None, None, None, :]
-    invalid = kj > pos
+    kj = jnp.arange(S)[None, :]
+    invalid = kj > positions                         # (B, S)
     if window:
-        invalid |= kj <= pos - window
-    scores = jnp.where(invalid, NEG_INF, scores)
+        invalid |= kj <= positions - window
+    scores = jnp.where(invalid[:, None, None, None, :], NEG_INF, scores)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, v, cfg, x.dtype)
     return matmul(out, p["wo"]), {"k": k, "v": v}

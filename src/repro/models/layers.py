@@ -13,6 +13,17 @@ import jax.numpy as jnp
 ACC = jnp.float32
 
 
+def chunk_pad(length: int, chunk: int) -> tuple[int, int]:
+    """(chunk, right-pad) so chunked causal mixers handle arbitrary
+    (serving) lengths: pad the sequence up to a chunk multiple and slice the
+    tail off the output — valid positions are unaffected (causal), and
+    multiples keep the configured chunk so training numerics are
+    unchanged. Never shrinks the chunk (a prime length must not degrade to
+    a token-by-token scan)."""
+    c = min(chunk, length)
+    return c, (-length) % c
+
+
 def dense_init(key, d_in, d_out, dtype, scale=None):
     scale = scale if scale is not None else d_in ** -0.5
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)

@@ -1,10 +1,20 @@
 """Top-level Model API: init / forward / loss / prefill / decode_step /
-input_specs — uniform across all 10 assigned architecture families.
+generate / input_specs — uniform across all 10 assigned architecture
+families.
 
 Batch dict conventions:
   train/prefill : {"tokens": (B, L) i32, "labels": (B, L) i32,
                    "frontend": (B, F, D) bf16 (vlm/audio only)}
-  decode        : serve_step(params, cache, token (B,1) i32, pos scalar)
+  decode        : decode_step(params, state, token (B,1) i32)
+
+Serving (DESIGN.md §6): the KV/recurrent caches travel inside a
+``DecodeState`` that also carries the per-row cache position ``pos (B,)``.
+Position bookkeeping is *internal* — ``prefill`` sets ``pos`` to the true
+cache position (including the VLM patch-prefix length and per-row ragged
+prompt lengths) and ``decode_step`` advances it, so callers never compute
+positions and cannot reproduce the frontend-offset bug class. ``generate``
+is the jit-resident decode loop (lax.scan over tokens, in-jit sampling)
+that serving and benchmarks drive.
 
 ``[audio]``/``[vlm]`` frontends are STUBS per the task spec: ``input_specs``
 provides precomputed frame/patch embeddings; the backbone is real.
@@ -22,6 +32,47 @@ from repro.models import transformer as tf
 from repro.models.layers import ACC, embed_init, embed_lookup, matmul, rms_norm, rms_norm_init
 
 PyTree = Any
+
+
+def _as_tree(params):
+    """Materialize leaf views from BucketedParams (core.bucketing) at the
+    model-apply boundary; plain pytrees pass through. Duck-typed so serving
+    a Collage-trained bucketed checkpoint needs no fp32 materialization."""
+    return params.tree() if hasattr(params, "tree") else params
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class DecodeState:
+    """Generation-loop carry: per-group caches + per-row cache position.
+
+    ``pos[b]`` is the next cache write position of row b == the number of
+    valid entries (frontend prefix + prompt + generated so far). It is the
+    single source of truth for RoPE positions and attention masking."""
+
+    layers: tuple                 # one cache pytree per decoder group
+    pos: jax.Array                # (B,) int32
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("layers"), self.layers),
+                 (jax.tree_util.GetAttrKey("pos"), self.pos)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children[0]), children[1])
+
+
+def sample_logits(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """In-jit sampling: greedy / temperature / top-k. logits (B, V) fp32.
+    ``temperature``/``top_k`` are static (they change the compiled program);
+    the PRNG ``key`` is consumed exactly once per call."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(ACC) / temperature
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,10 +125,17 @@ class Model:
             x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
         return x
 
+    @property
+    def _prefix_len(self) -> int:
+        """Decoder-sequence prefix occupied by the frontend: VLM patches sit
+        in the decoder cache; enc-dec frontends go through the encoder."""
+        return self.cfg.frontend_len if self.cfg.family == "vlm" else 0
+
     # ------------------------------------------------------------ forward --
     def forward(self, params, batch, remat: str = "none"):
         """Full-sequence logits (training / prefill-style). Returns
         (logits, aux_loss)."""
+        params = _as_tree(params)
         cfg = self.cfg
         memory = None
         if cfg.is_encdec:
@@ -110,40 +168,109 @@ class Model:
         return total, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}
 
     # ------------------------------------------------------------ serving --
-    def init_cache(self, batch_size: int, cache_len: int):
+    def init_decode_state(self, batch_size: int, cache_len: int) -> DecodeState:
         cfg = self.cfg
         dtype = jnp.dtype(cfg.dtype)
         mem_len = cfg.frontend_len if cfg.is_encdec else 0
-        return [tf.group_init_cache(g, cfg, batch_size, cache_len, dtype,
-                                    memory_len=mem_len)
-                for g in cfg.decoder_program()]
+        layers = tuple(tf.group_init_cache(g, cfg, batch_size, cache_len, dtype,
+                                           memory_len=mem_len)
+                       for g in cfg.decoder_program())
+        return DecodeState(layers, jnp.zeros((batch_size,), jnp.int32))
 
-    def prefill(self, params, batch, cache_len: int):
-        """Process the prompt; returns (last-position logits, cache)."""
+    def _has_recurrent_state(self) -> bool:
+        return any(s.kind in ("mamba", "rwkv_tmix", "rwkv_cmix")
+                   for g in self.cfg.decoder_program() for s in g.period)
+
+    def prefill(self, params, batch, cache_len: int,
+                prompt_lens: Optional[jax.Array] = None):
+        """Process the prompt; returns (per-row last-valid-position logits
+        (B,1,V), DecodeState).
+
+        ``prompt_lens (B,) i32``: valid prompt length per row for ragged
+        batches (tokens right-padded to the common length). Recurrent-state
+        archs (SSM/RWKV/hybrid) consume pad tokens into their state, so
+        ragged prefill is only supported for pure-attention caches — batch
+        those archs by exact length (the serve engine does)."""
+        params = _as_tree(params)
         cfg = self.cfg
+        B, T = batch["tokens"].shape
+        F = self._prefix_len
+        assert cache_len >= F + T, (
+            f"cache_len {cache_len} < frontend {F} + prompt {T}: the KV "
+            f"write would clip")
+        if prompt_lens is not None and self._has_recurrent_state():
+            raise ValueError(
+                "ragged prefill (prompt_lens) unsupported for recurrent-state "
+                "archs: pad tokens would pollute the carried state; batch by "
+                "exact length instead")
         memory = None
         if cfg.is_encdec:
             memory = self._encode(params, batch["frontend"].astype(
                 jnp.dtype(cfg.dtype)))
         x = self._decoder_input(params, batch)
-        caches = []
+        layers = []
         for g, gp in zip(cfg.decoder_program(), params["decoder"]["groups"]):
             x, c = tf.group_prefill(gp, x, g, cfg, cache_len, memory=memory)
-            caches.append(c)
-        logits = self._head(params, x[:, -1:])
-        return logits, caches
+            layers.append(c)
+        if prompt_lens is None:
+            pos = jnp.full((B,), F + T, jnp.int32)
+        else:
+            pos = F + prompt_lens.astype(jnp.int32)
+        # last valid position per row, in decoder-sequence coordinates
+        x_last = jnp.take_along_axis(x, (pos - 1)[:, None, None], axis=1)
+        logits = self._head(params, x_last)
+        return logits, DecodeState(tuple(layers), pos)
 
-    def decode_step(self, params, caches, token, pos):
-        """One-token serve step: token (B,1) i32, pos scalar i32.
-        Returns (logits (B,1,V) fp32, new caches)."""
+    def decode_step(self, params, state: DecodeState, token):
+        """One-token serve step: token (B,1) i32; positions come from
+        ``state.pos``. Returns (logits (B,1,V) fp32, new DecodeState)."""
+        params = _as_tree(params)
         cfg = self.cfg
         x = embed_lookup(params["embed"], token)
-        new_caches = []
+        new_layers = []
         for g, gp, c in zip(cfg.decoder_program(),
-                            params["decoder"]["groups"], caches):
-            x, nc = tf.group_decode(gp, x, g, cfg, c, pos)
-            new_caches.append(nc)
-        return self._head(params, x), new_caches
+                            params["decoder"]["groups"], state.layers):
+            x, nc = tf.group_decode(gp, x, g, cfg, c, state.pos)
+            new_layers.append(nc)
+        return self._head(params, x), DecodeState(tuple(new_layers),
+                                                  state.pos + 1)
+
+    def generate(self, params, batch, max_new_tokens: int, *,
+                 key=None, temperature: float = 0.0, top_k: int = 0,
+                 prompt_lens: Optional[jax.Array] = None,
+                 cache_len: Optional[int] = None):
+        """Jit-resident generation: prefill + a ``lax.scan`` over decode
+        steps with the DecodeState as donated carry and in-jit sampling.
+        Returns (tokens (B, max_new_tokens) i32, final DecodeState).
+
+        Wrap in ``jax.jit`` with static ``max_new_tokens`` / ``temperature``
+        / ``top_k`` / ``cache_len`` — the whole token loop then lowers to one
+        XLA while-loop: no per-token dispatch, no per-step cache allocation
+        (the scan carry is double-buffered once, not per token)."""
+        params = _as_tree(params)
+        B, T = batch["tokens"].shape
+        F = self._prefix_len
+        if cache_len is None:
+            cache_len = F + T + max_new_tokens
+        assert cache_len >= F + T + max_new_tokens, (
+            f"cache_len {cache_len} < {F}+{T}+{max_new_tokens}")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, max_new_tokens)  # one subkey per token
+        logits, state = self.prefill(params, batch, cache_len,
+                                     prompt_lens=prompt_lens)
+        tok = sample_logits(logits[:, -1], keys[0], temperature, top_k)[:, None]
+
+        def body(carry, k):
+            state, tok = carry
+            logits, state = self.decode_step(params, state, tok)
+            nxt = sample_logits(logits[:, -1], k, temperature, top_k)[:, None]
+            return (state, nxt), tok[:, 0]
+
+        if max_new_tokens == 1:
+            return tok, state
+        (state, last), toks = jax.lax.scan(body, (state, tok), keys[1:])
+        return jnp.concatenate([toks.T, last], axis=1), state
 
     # --------------------------------------------------------- dry-run IO --
     def input_specs(self, shape: ShapeConfig) -> dict:
@@ -152,7 +279,6 @@ class Model:
         cfg = self.cfg
         B, L = shape.global_batch, shape.seq_len
         dt = jnp.dtype(cfg.dtype)
-        f32 = jnp.float32
         sds = jax.ShapeDtypeStruct
         if shape.mode in ("train", "prefill"):
             text_len = L - cfg.frontend_len if cfg.family == "vlm" else L
@@ -163,11 +289,9 @@ class Model:
             if cfg.is_encdec:
                 batch["frontend"] = sds((B, cfg.frontend_len, cfg.d_model), dt)
             return batch
-        # decode: one token against a cache of length L
-        caches = jax.eval_shape(lambda: self.init_cache(B, L))
-        return {"token": sds((B, 1), jnp.int32),
-                "pos": sds((), jnp.int32),
-                "caches": caches}
+        # decode: one token against a state of cache length L
+        state = jax.eval_shape(lambda: self.init_decode_state(B, L))
+        return {"token": sds((B, 1), jnp.int32), "state": state}
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ACC, dense_init, matmul
+from repro.models.layers import ACC, chunk_pad, dense_init, matmul
 
 W_LORA = 64
 
@@ -91,13 +91,14 @@ def rwkv_tmix_apply(p, x, cfg, chunk=None):
     B, L, d = x.shape
     hd = cfg.rwkv_head_dim
     H = d // hd
-    C = min(chunk or cfg.rwkv_chunk, L)
-    assert L % C == 0, (L, C)
-    nc = L // C
+    C, pad = chunk_pad(L, chunk or cfg.rwkv_chunk)
+    nc = (L + pad) // C
     r, k, v, g, logw, _ = _tmix_inputs(p, x, cfg)
     u = p["u"].astype(ACC)                            # (H, hd)
 
     def to_chunks(t):  # (B, L, H, hd) -> (nc, B, C, H, hd)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
         return t.reshape(B, nc, C, H, hd).swapaxes(0, 1)
 
     rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))
@@ -127,7 +128,7 @@ def rwkv_tmix_apply(p, x, cfg, chunk=None):
 
     S0 = jnp.zeros((B, H, hd, hd), ACC)
     _, o = jax.lax.scan(chunk_body, S0, (rc, kc, vc, wc))
-    o = o.swapaxes(0, 1).reshape(B, L, H, hd)
+    o = o.swapaxes(0, 1).reshape(B, L + pad, H, hd)[:, :L]
     return _out_proj(p, o, g, cfg, x.dtype)
 
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ACC, dense_init, matmul
+from repro.models.layers import ACC, chunk_pad, dense_init, matmul
 
 
 def mamba_init(key, cfg, dtype):
@@ -72,11 +72,12 @@ def mamba_apply(p, x, cfg):
     xs, z, dt, a, b_ssm, c_ssm, _ = _ssm_inputs(p, x, cfg)
     n = cfg.ssm_d_state
     d_in = xs.shape[-1]
-    ck = min(cfg.ssm_chunk, L)
-    assert L % ck == 0, (L, ck)
-    nc = L // ck
+    ck, pad = chunk_pad(L, cfg.ssm_chunk)
+    nc = (L + pad) // ck
 
     def to_chunks(t):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
         return t.reshape(B, nc, ck, *t.shape[2:]).swapaxes(0, 1)
 
     xs_c, dt_c = to_chunks(xs.astype(ACC)), to_chunks(dt)
@@ -95,7 +96,7 @@ def mamba_apply(p, x, cfg):
 
     h0 = jnp.zeros((B, d_in, n), ACC)
     _, y = jax.lax.scan(chunk_body, h0, (xs_c, dt_c, b_c, c_c))
-    y = y.swapaxes(0, 1).reshape(B, L, d_in)
+    y = y.swapaxes(0, 1).reshape(B, L + pad, d_in)[:, :L]
     y = y + p["D"].astype(ACC) * xs.astype(ACC)
     y = y * jax.nn.silu(z.astype(ACC))
     return matmul(y.astype(x.dtype), p["out_proj"])

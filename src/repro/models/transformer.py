@@ -264,53 +264,75 @@ def _mixer_prefill(p, x, sub: Sub, cfg):
 
 
 def _mamba_state_after(p, x, cfg):
-    """Final SSM state after consuming x (recomputed chunked — cheap)."""
+    """Final SSM state after consuming x (recomputed chunked — cheap).
+
+    The state must reflect EXACTLY the L real tokens, so (unlike the
+    pad-and-slice output path) an off-chunk tail is advanced with one exact
+    partial-chunk step — pad tokens must never enter the carried state."""
     B, L, _ = x.shape
     xs, z, dt, a, b_ssm, c_ssm, conv_state = ssm_lib._ssm_inputs(p, x, cfg)
     ck = min(cfg.ssm_chunk, L)
-    nc = L // ck
+    nc = L // ck                                 # full chunks
     d_in = xs.shape[-1]
+    xs_f = xs.astype(ACC)
 
-    def chunk_body(h0, idx):
-        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * ck, ck, axis=1)
-        dt_k, b_k, xs_k = sl(dt), sl(b_ssm), sl(xs.astype(ACC))
+    def advance(h0, dt_k, b_k, xs_k):
         a_bar = jnp.exp(dt_k[..., None] * a)
         b_bar = (dt_k * xs_k)[..., None] * b_k[:, :, None, :]
         acc_a, acc_b = jax.lax.associative_scan(
-            lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (a_bar, b_bar), axis=1)
-        return acc_a[:, -1] * h0 + acc_b[:, -1], None
+            lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (a_bar, b_bar),
+            axis=1)
+        return acc_a[:, -1] * h0 + acc_b[:, -1]
 
-    h0 = jnp.zeros((B, d_in, cfg.ssm_d_state), ACC)
-    h, _ = jax.lax.scan(chunk_body, h0, jnp.arange(nc))
+    def chunk_body(h0, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * ck, ck, axis=1)
+        return advance(h0, sl(dt), sl(b_ssm), sl(xs_f)), None
+
+    h = jnp.zeros((B, d_in, cfg.ssm_d_state), ACC)
+    h, _ = jax.lax.scan(chunk_body, h, jnp.arange(nc))
+    if L % ck:                                   # exact partial-chunk tail
+        t0 = nc * ck
+        h = advance(h, dt[:, t0:], b_ssm[:, t0:], xs_f[:, t0:])
     K = cfg.ssm_conv_width
-    # conv tail: last K-1 pre-activation inputs
+    # conv tail: last K-1 pre-activation inputs (zero-extended left for
+    # prompts shorter than the conv receptive field)
     xz = jnp.split(jnp.matmul(x, p["in_proj"],
                               preferred_element_type=ACC).astype(x.dtype), 2, -1)[0]
     conv = xz[:, -(K - 1):]
+    if L < K - 1:
+        conv = jnp.concatenate(
+            [jnp.zeros((B, K - 1 - L, d_in), conv.dtype), conv], axis=1)
     return {"h": h, "conv": conv}
 
 
 def _rwkv_state_after(p, x, cfg):
+    """Final WKV state after consuming x; exact partial-chunk tail as in
+    ``_mamba_state_after``."""
     B, L, d = x.shape
     hd = cfg.rwkv_head_dim
     H = d // hd
     r, k, v, g, logw, last = rwkv_lib._tmix_inputs(p, x, cfg)
     C = min(cfg.rwkv_chunk, L)
-    nc = L // C
+    nc = L // C                                  # full chunks
+
+    def advance(S, kk, vk, lw):
+        cum = jnp.cumsum(lw, axis=1)
+        decay_all = jnp.exp(cum[:, -1])
+        k_hat = kk * jnp.exp(cum[:, -1][:, None] - cum)
+        return decay_all[..., None] * S + jnp.einsum("bjhd,bjhe->bhde",
+                                                     k_hat, vk)
 
     def to_chunks(t):
-        return t.reshape(B, nc, C, H, hd).swapaxes(0, 1)
+        return t[:, :nc * C].reshape(B, nc, C, H, hd).swapaxes(0, 1)
 
     kc, vc, wc = map(to_chunks, (k, v, logw))
 
     def chunk_body(S, inp):
-        kk, vk, lw = inp
-        cum = jnp.cumsum(lw, axis=1)
-        decay_all = jnp.exp(cum[:, -1])
-        k_hat = kk * jnp.exp(cum[:, -1][:, None] - cum)
-        S = decay_all[..., None] * S + jnp.einsum("bjhd,bjhe->bhde", k_hat, vk)
-        return S, None
+        return advance(S, *inp), None
 
     S0 = jnp.zeros((B, H, hd, hd), ACC)
     S, _ = jax.lax.scan(chunk_body, S0, (kc, vc, wc))
+    if L % C:                                    # exact partial-chunk tail
+        t0 = nc * C
+        S = advance(S, k[:, t0:], v[:, t0:], logw[:, t0:])
     return {"S": S, "last_x": x[:, -1]}

@@ -99,19 +99,23 @@ def make_train_step(model: Model, opt: CollageAdamW, *,
                 lambda x: x.reshape((n, microbatch) + x.shape[1:]), batch)
 
         def body(carry, mb):
-            acc, loss_acc = carry
-            loss, _, grads = grads_of(params, mb)
+            acc, loss_acc, ce_acc, aux_acc = carry
+            loss, m, grads = grads_of(params, mb)
             acc = jax.tree_util.tree_map(
                 lambda a, g: a + g.astype(jnp.float32), acc, grads)
-            return (acc, loss_acc + loss), None
+            return (acc, loss_acc + loss, ce_acc + m["ce"],
+                    aux_acc + m["aux"]), None
 
         zero = jax.tree_util.tree_map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (gsum, loss_sum), _ = jax.lax.scan(body, (zero, 0.0), chunks)
+        (gsum, loss_sum, ce_sum, aux_sum), _ = jax.lax.scan(
+            body, (zero, 0.0, 0.0, 0.0), chunks)
         grads = jax.tree_util.tree_map(
             lambda g, p: (g / n).astype(p.dtype), gsum, params)
         loss = loss_sum / n
-        return loss, {"ce": loss, "aux": jnp.zeros(()), "ppl": jnp.exp(loss)}, grads
+        ce = ce_sum / n                  # CE alone — the total includes
+        aux = aux_sum / n                # 0.01·aux on MoE configs
+        return loss, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}, grads
 
     def train_step(state: TrainState, batch):
         loss, lmetrics, grads = accum_grads(state.params, batch)

@@ -310,6 +310,7 @@ class TestFusedMetricsRegression:
                 np.testing.assert_allclose(float(a), float(b), rtol=2e-5,
                                            atol=1e-7, err_msg=str(strategy))
 
+    @pytest.mark.slow
     def test_fused_step_all_strategies_bit_identical_params(self):
         """use_fused_kernel now covers KAHAN/D⁻/D too (was silently falling
         back for them is fine, but A/B/C only in the kernel)."""

@@ -178,21 +178,58 @@ def test_context_parallel_decode_matches():
         B, L = 1, 64
         batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, 16), 0,
                                               cfg.vocab_size)}
-        _, cache = model.prefill(params, batch, cache_len=L)
+        _, state = model.prefill(params, batch, cache_len=L)
         tok = jnp.ones((B, 1), jnp.int32)
-        ref, _ = model.decode_step(params, cache, tok, jnp.int32(16))
+        ref, _ = model.decode_step(params, state, tok)
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         with mesh:
             p_sh = shard_lib.state_shardings(
                 jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), mesh)
-            c_sh = shard_lib.cache_shardings(
-                jax.eval_shape(lambda: cache), mesh, context_parallel=True)
+            s_sh = shard_lib.cache_shardings(
+                jax.eval_shape(lambda: state), mesh, context_parallel=True)
             pd = jax.device_put(params, p_sh)
-            cd = jax.device_put(cache, c_sh)
-            got, _ = jax.jit(model.decode_step)(pd, cd, tok, jnp.int32(16))
+            sd = jax.device_put(state, s_sh)
+            got, _ = jax.jit(model.decode_step)(pd, sd, tok)
         np.testing.assert_allclose(np.asarray(ref, np.float32),
                                    np.asarray(got, np.float32),
                                    rtol=3e-2, atol=3e-2)
         print("CTX_OK")
+    """)
+
+
+def test_generation_engine_lowers_on_tp_mesh():
+    """The jit-resident generate (prefill + scan decode loop, donated
+    DecodeState) must lower and compile under FSDP×TP shardings."""
+    run_devs("""
+        import functools
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.distributed import sharding as shard_lib
+        from repro.models.model import build_model
+
+        cfg = get_config("granite-3-2b", smoke=True)
+        model = build_model(cfg)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        p_sh = shard_lib.state_shardings(params_abs, mesh)
+        batch_abs = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+        b_sh = shard_lib.batch_shardings(batch_abs, mesh)
+        with mesh:
+            # one-step decode with donated state: cache buffers must alias
+            state_abs = jax.eval_shape(
+                lambda: model.init_decode_state(8, 32))
+            s_sh = shard_lib.cache_shardings(state_abs, mesh)
+            tok_abs = jax.ShapeDtypeStruct((8, 1), jnp.int32)
+            step = jax.jit(model.decode_step,
+                           in_shardings=(p_sh, s_sh, None),
+                           out_shardings=(None, s_sh), donate_argnums=(1,))
+            cstep = step.lower(params_abs, state_abs, tok_abs).compile()
+            assert cstep.memory_analysis().alias_size_in_bytes > 0
+
+            # whole generation loop in one program
+            gen = jax.jit(functools.partial(model.generate, max_new_tokens=8),
+                          in_shardings=(p_sh, b_sh))
+            gen.lower(params_abs, batch_abs).compile()
+        print("ENGINE_TP_OK")
     """)

@@ -224,7 +224,7 @@ finite_f = st.floats(min_value=-2.0**80, max_value=2.0**80,
                      allow_nan=False, allow_infinity=False, width=32)
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(a=finite_f, b=finite_f)
 def test_two_sum_property(a, b):
     ab = jnp.asarray([a, b], jnp.float32).astype(jnp.bfloat16)
@@ -235,7 +235,7 @@ def test_two_sum_property(a, b):
         F64(np.asarray(ab[0])) + F64(np.asarray(ab[1]))
 
 
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(a=st.floats(min_value=-2.0**40, max_value=2.0**40, allow_nan=False, width=32),
        b=st.floats(min_value=-2.0**40, max_value=2.0**40, allow_nan=False, width=32))
 def test_two_prod_property(a, b):
@@ -248,7 +248,7 @@ def test_two_prod_property(a, b):
         F64(np.asarray(ab[0])) * F64(np.asarray(ab[1]))
 
 
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=50, deadline=None)
 @given(hi=st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
        a=st.floats(min_value=-1.0, max_value=1.0, allow_nan=False, width=32))
 def test_grow_property(hi, a):

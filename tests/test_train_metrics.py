@@ -1,0 +1,59 @@
+"""Microbatched gradient accumulation must report the same metric
+*semantics* as the unaccumulated path (regression: the accumulated path
+labeled the total loss — incl. 0.01·aux — as "ce", zeroed "aux", and
+derived "ppl" from the total, which is wrong for MoE configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.collage import CollageAdamW
+from repro.core.precision import PrecisionPolicy, Strategy
+from repro.models.model import build_model
+from repro.train import train_loop
+
+
+def _setup(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    opt = CollageAdamW(1e-3, b2=0.95,
+                       policy=PrecisionPolicy(strategy=Strategy.C_COLLAGE_PLUS))
+    B, L = 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    batch = {"tokens": jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (B, L), 0, cfg.vocab_size)}
+    return cfg, model, opt, batch
+
+
+def test_accum_metrics_label_ce_not_total_loss():
+    """On a MoE config (aux > 0) the accumulated path must report ce/aux
+    separately and ppl = exp(ce), matching the unaccumulated semantics."""
+    cfg, model, opt, batch = _setup("qwen3-moe-30b-a3b")
+    state = train_loop.init_state(model, opt, jax.random.PRNGKey(0))
+    plain = jax.jit(train_loop.make_train_step(model, opt))
+    accum = jax.jit(train_loop.make_train_step(model, opt, microbatch=2))
+    _, m0 = plain(state, batch)
+    _, m1 = accum(state, batch)
+
+    assert float(m1["aux"]) > 0.0, "accum path zeroed the MoE aux metric"
+    # ce must be the cross entropy alone, not the aux-laden total
+    assert float(m1["loss"]) > float(m1["ce"])
+    np.testing.assert_allclose(float(m1["ppl"]),
+                               float(np.exp(float(m1["ce"]))), rtol=1e-5)
+    # microbatched mean-of-chunk-ce ≈ full-batch ce (bf16 forward tolerance)
+    np.testing.assert_allclose(float(m1["ce"]), float(m0["ce"]), rtol=5e-2)
+    np.testing.assert_allclose(float(m1["aux"]), float(m0["aux"]), rtol=5e-2)
+
+
+def test_accum_grads_match_unaccumulated():
+    cfg, model, opt, batch = _setup("granite-3-2b")
+    state = train_loop.init_state(model, opt, jax.random.PRNGKey(0))
+    plain = jax.jit(train_loop.make_train_step(model, opt))
+    accum = jax.jit(train_loop.make_train_step(model, opt, microbatch=2))
+    s0, m0 = plain(state, batch)
+    s1, m1 = accum(state, batch)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]), rtol=5e-2)
+    for a, b in zip(jax.tree_util.tree_leaves(s0.params),
+                    jax.tree_util.tree_leaves(s1.params)):
+        aa, bb = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        assert (np.abs(aa - bb) <= 2e-2 * np.maximum(np.abs(aa), 1)).mean() > 0.98
