@@ -1,0 +1,230 @@
+"""Sharded train-step benchmark: leaf-wise vs bucket-wise compressed
+gradient collectives, and dp=1 vs dp=8 host-device scaling.
+
+What is measured (8 virtual host devices, smoke-size gpt):
+
+  * collective census of the LOWERED step (StableHLO, pre-XLA-optimization
+    — the CPU backend upcasts low-precision collectives at compile time, a
+    backend artifact the staged IR doesn't have):
+      - tree layout + bf16_ef → one gradient all-reduce PER LEAF
+      - bucketed layout + bf16_ef → one PER DTYPE BUCKET
+    validated claim: bucket-level compression uses STRICTLY FEWER
+    collective ops than leaf-wise.
+  * staged wire bytes compressed (bf16/fp8 payload) vs uncompressed (f32):
+    validated claim: strictly fewer bytes.
+  * per-device cost of dp=8 vs dp=1 (utils.hlo_analysis on the compiled
+    HLO): validated claim: dp=8 per-device FLOPs < dp=1/4 (the container
+    has too few physical cores for wall-clock scaling to be meaningful;
+    step times are reported informationally).
+
+  PYTHONPATH=src python -m benchmarks.train_step [--quick]
+
+Emits ``BENCH_train_step.json``; wired into benchmarks.run as the
+``train_step`` entry (which re-execs this module in a fresh interpreter so
+the 8-device host-platform flag can take effect before jax initializes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+N_DEV = 8
+
+
+# --------------------------------------------------------------------------
+# heavy work (fresh interpreter: jax imported only inside)
+# --------------------------------------------------------------------------
+
+def _bench(quick: bool, out_path: str) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.collage import CollageAdamW
+    from repro.core.precision import (BucketPolicy, PrecisionPolicy,
+                                      Strategy)
+    from repro.data.synthetic import make_batch_fn
+    from repro.distributed import compression
+    from repro.distributed import sharding as shard_lib
+    from repro.models.model import build_model
+    from repro.train import sharded, train_loop
+    from repro.utils import hlo_analysis
+
+    cfg = get_config("gpt-tiny", smoke=True)
+    model = build_model(cfg)
+    shape = ShapeConfig("bench", 64, 32, "train")
+    batch_fn = make_batch_fn(cfg, shape)
+    mesh8 = jax.make_mesh((N_DEV,), ("data",))
+    mesh1 = jax.make_mesh((1,), ("data",))
+
+    def mkopt(bucketed: bool, mesh) -> CollageAdamW:
+        bp = BucketPolicy(
+            enabled=bucketed,
+            pad_multiple=shard_lib.bucket_pad_multiple(
+                mesh, block=compression.BLOCK)) \
+            if bucketed else BucketPolicy()
+        return CollageAdamW(1e-3, b2=0.95, policy=PrecisionPolicy(
+            strategy=Strategy.C_COLLAGE_PLUS, bucketing=bp))
+
+    def build(mesh, bucketed, compress, zero):
+        opt = mkopt(bucketed, mesh)
+        state = sharded.init_state(model, opt, jax.random.PRNGKey(0), mesh,
+                                   grad_compression=compress)
+        state = sharded.device_put_state(state, mesh, zero_shard=zero)
+        step = sharded.make_sharded_train_step(
+            model, opt, mesh, grad_compression=compress, zero_shard=zero,
+            jit=False)
+        return opt, state, step
+
+    def census(mesh, bucketed, compress, zero):
+        _, state, step = build(mesh, bucketed, compress, zero)
+        txt = jax.jit(step).lower(state, batch_fn(0)).as_text()
+        colls = hlo_analysis.stablehlo_collectives(txt)
+        # gradient-sized collectives only (scalars are metric pmeans)
+        grad_colls = [c for c in colls if c["numel"] > 64]
+        return {
+            "ops_total": len(colls),
+            "grad_ops": len(grad_colls),
+            "grad_ops_by_dtype": _by_dtype(grad_colls),
+            "staged_wire_bytes": sum(c["bytes"] for c in grad_colls),
+        }
+
+    def _by_dtype(colls):
+        out: dict = {}
+        for c in colls:
+            k = f'{c["kind"]}:{c["dtype"]}'
+            out[k] = out.get(k, 0) + 1
+        return out
+
+    def timed(mesh, bucketed, compress, zero, iters):
+        _, state, step = build(mesh, bucketed, compress, zero)
+        jstep = jax.jit(step)
+        batch = batch_fn(0)
+        lowered = jstep.lower(state, batch)
+        compiled = lowered.compile()
+        costs = hlo_analysis.analyze(compiled.as_text())
+        state, m = jstep(state, batch)          # warmup
+        jax.block_until_ready(m["loss"])
+        times = []
+        for i in range(iters):
+            t0 = time.perf_counter()
+            state, m = jstep(state, batch_fn(i + 1))
+            jax.block_until_ready(m["loss"])
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return {
+            "steady_s": times[len(times) // 2],
+            "per_device_flops": costs.flops,
+            "per_device_collective_bytes": dict(costs.collective_bytes),
+            "per_device_collective_counts": dict(costs.collective_counts),
+        }
+
+    iters = 5 if quick else 10
+    n_leaves = len(jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+
+    results = {
+        "n_param_leaves": n_leaves,
+        "census": {
+            "leafwise_bf16_ef": census(mesh8, False, "bf16_ef", False),
+            "bucket_bf16_ef": census(mesh8, True, "bf16_ef", False),
+            "bucket_fp8_ef": census(mesh8, True, "fp8_ef", False),
+            "bucket_uncompressed": census(mesh8, True, "none", False),
+            "bucket_zero_bf16_ef": census(mesh8, True, "bf16_ef", True),
+        },
+        "timing": {
+            "dp1_bucket_bf16_ef": timed(mesh1, True, "bf16_ef", False,
+                                        iters),
+            "dp8_bucket_bf16_ef": timed(mesh8, True, "bf16_ef", False,
+                                        iters),
+            "dp8_bucket_zero_bf16_ef": timed(mesh8, True, "bf16_ef", True,
+                                             iters),
+            "dp8_leafwise_bf16_ef": timed(mesh8, False, "bf16_ef", False,
+                                          iters),
+        },
+    }
+
+    c = results["census"]
+    t = results["timing"]
+    results["ok"] = {
+        # the acceptance-criteria claim: one collective per bucket beats one
+        # per leaf, strictly
+        "bucket_fewer_collective_ops_than_leafwise":
+            c["bucket_bf16_ef"]["grad_ops"]
+            < c["leafwise_bf16_ef"]["grad_ops"],
+        "compressed_fewer_wire_bytes_than_uncompressed":
+            c["bucket_bf16_ef"]["staged_wire_bytes"]
+            < c["bucket_uncompressed"]["staged_wire_bytes"]
+            and c["bucket_fp8_ef"]["staged_wire_bytes"]
+            < c["bucket_bf16_ef"]["staged_wire_bytes"],
+        # host-device scaling: per-device compute shrinks ~linearly with dp
+        # (wall-clock is meaningless on this container's core count)
+        "dp8_per_device_flops_under_quarter_of_dp1":
+            t["dp8_bucket_bf16_ef"]["per_device_flops"]
+            < 0.25 * t["dp1_bucket_bf16_ef"]["per_device_flops"],
+    }
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+# --------------------------------------------------------------------------
+# benchmarks.run entry (fresh interpreter for the device-count flag)
+# --------------------------------------------------------------------------
+
+def train_step_bench(quick: bool = False,
+                     out_path: str = "BENCH_train_step.json"):
+    """Returns (csv_rows, ok_dict) for benchmarks.run."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+    env.setdefault("PYTHONPATH", "src")
+    args = [sys.executable, "-m", "benchmarks.train_step", "--out", out_path]
+    if quick:
+        args.append("--quick")
+    # _bench writes the json before claim evaluation, so its absence (not
+    # the exit code — 1 also means "a claim failed") is the crash signal;
+    # drop any stale file so a crash can't report a previous run's numbers
+    if os.path.exists(out_path):
+        os.remove(out_path)
+    proc = subprocess.run(args, env=env, capture_output=True, text=True)
+    if not os.path.exists(out_path):
+        raise RuntimeError(
+            f"train_step bench crashed (exit {proc.returncode}):\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    with open(out_path) as f:
+        results = json.load(f)
+    rows = []
+    for name, r in results["timing"].items():
+        rows.append(f"train_step/{name},{r['steady_s'] * 1e6:.1f},"
+                    f"flops/dev={r['per_device_flops']:.3e}")
+    for name, r in results["census"].items():
+        rows.append(f"train_step/census/{name},0.0,"
+                    f"grad_collectives={r['grad_ops']} "
+                    f"wire_bytes={r['staged_wire_bytes']}")
+    return rows, dict(results["ok"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_train_step.json")
+    args = ap.parse_args(argv)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={N_DEV}"
+        ).strip()
+    results = _bench(args.quick, args.out)
+    for k, v in results["ok"].items():
+        print(f"#  {'PASS' if v else 'FAIL'} {k}")
+    return 0 if all(results["ok"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

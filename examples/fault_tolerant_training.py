@@ -40,7 +40,7 @@ if __name__ == "__main__":
     sup = RunSupervisor(SupervisorConfig(ckpt_dir, ckpt_every=5),
                         fault_hook=fault)
     final, step_i, metrics = sup.run(state0, step, batch_fn, n_steps=20)
-    print(f"recovered from checkpoints at steps: {sup.recoveries}")
+    print(f"recovered incidents (faulting steps): {sup.recoveries}")
 
     ref = state0
     for i in range(20):

@@ -41,7 +41,11 @@ SUBLANES = 8     # (8, 128) native VMEM tile: default pad keeps rows aligned
 PAD_DEFAULT = SUBLANES * LANES
 
 # Bucket-resident role arrays (leaf names under BucketedParams/-OptState).
-BUCKET_STATE_FIELDS = ("data", "m", "vhi", "vlo", "delta", "master")
+# grad_err rows are 2-D (n_dp, padded): per-DEVICE compressor state of the
+# error-feedback gradient compression (distributed/compression.py) — the
+# leading dim is the data-parallel device index, not a shardable flat axis.
+BUCKET_STATE_FIELDS = ("data", "m", "vhi", "vlo", "delta", "master",
+                       "grad_err")
 
 
 # --------------------------------------------------------------------------
@@ -240,6 +244,10 @@ class BucketedOptState:
       delta   δθ (B/C) or Kahan c
       master  fp32 master weights (option D)
       rng     uint32 scalar seed for the counter-based SR stream
+      grad_err error-feedback residual of the compressed gradient
+              all-reduce, one (n_dp, padded) f32/bf16 row-block per bucket
+              (row = per-dp-device compressor state); None when gradient
+              compression is off
     """
 
     step: jax.Array
@@ -250,20 +258,24 @@ class BucketedOptState:
     master: Optional[tuple]
     rng: Optional[jax.Array]
     layout: BucketLayout
+    grad_err: Optional[tuple] = None
 
     def tree_flatten_with_keys(self):
         g = jax.tree_util.GetAttrKey
         return (((g("step"), self.step), (g("m"), self.m),
                  (g("vhi"), self.vhi), (g("vlo"), self.vlo),
                  (g("delta"), self.delta), (g("master"), self.master),
-                 (g("rng"), self.rng)), self.layout)
+                 (g("rng"), self.rng), (g("grad_err"), self.grad_err)),
+                self.layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        step, m, vhi, vlo, delta, master, rng = children
-        as_t = lambda x: tuple(x) if x is not None else None
-        return cls(step, tuple(m), tuple(vhi), as_t(vlo), as_t(delta),
-                   as_t(master), rng, aux)
+        step, m, vhi, vlo, delta, master, rng, grad_err = children
+        # tolerate non-iterable placeholders (jax internals rebuild trees
+        # with proxy objects in place of None subtrees, e.g. device_put)
+        as_t = lambda x: tuple(x) if isinstance(x, (list, tuple)) else x
+        return cls(step, as_t(m), as_t(vhi), as_t(vlo), as_t(delta),
+                   as_t(master), rng, aux, as_t(grad_err))
 
 
 def migrate(obj: Any, new_layout: BucketLayout) -> Any:
@@ -280,9 +292,15 @@ def migrate(obj: Any, new_layout: BucketLayout) -> Any:
         if isinstance(x, BucketedOptState):
             rb = lambda t: (rebucket(t, x.layout, new_layout)
                             if t is not None else None)
+            ge = None
+            if x.grad_err is not None:
+                # per-device rows migrate independently (vmap over dim 0)
+                ge = jax.vmap(
+                    lambda rows: rebucket(rows, x.layout, new_layout)
+                )(tuple(x.grad_err))
             return BucketedOptState(x.step, rb(x.m), rb(x.vhi), rb(x.vlo),
                                     rb(x.delta), rb(x.master), x.rng,
-                                    new_layout)
+                                    new_layout, ge)
         return x
 
     return jax.tree_util.tree_map(fix, obj, is_leaf=is_bucketed)
@@ -308,9 +326,24 @@ def state_template_for_layout(obj: Any, layout: BucketLayout) -> Any:
                 tuple(jnp.zeros((b.padded,), jnp.dtype(b.dtype))
                       for b in layout.buckets), layout)
         if isinstance(x, BucketedOptState):
+            ge = None
+            if x.grad_err is not None:
+                n_dp = x.grad_err[0].shape[0]
+                # residual dtype is per-bucket (f32 vs exactly-representable
+                # component dtype) and buckets group by PARAM dtype, so map
+                # it across layouts via the bucket's param dtype — a single
+                # template dtype would silently re-round f32 residuals on
+                # restore (checkpoint.restore casts to the template)
+                by_dtype = {jnp.dtype(b.dtype): e.dtype
+                            for b, e in zip(x.layout.buckets, x.grad_err)}
+                ge = tuple(
+                    jnp.zeros((n_dp, b.padded),
+                              by_dtype.get(jnp.dtype(b.dtype),
+                                           x.grad_err[0].dtype))
+                    for b in layout.buckets)
             return BucketedOptState(x.step, zeros_for(x.m), zeros_for(x.vhi),
                                     zeros_for(x.vlo), zeros_for(x.delta),
-                                    zeros_for(x.master), x.rng, layout)
+                                    zeros_for(x.master), x.rng, layout, ge)
         return x
 
     return jax.tree_util.tree_map(fix, obj, is_leaf=is_bucketed)

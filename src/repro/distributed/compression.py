@@ -1,62 +1,331 @@
-"""Gradient compression for cross-pod all-reduce, with MCF error feedback.
+"""Gradient compression for the data-parallel all-reduce, with error feedback.
 
 Beyond-paper distributed-optimization trick that reuses the Collage insight:
-when gradients are compressed (fp32→bf16, or bf16→fp8 with per-block scales)
+when gradients are compressed (fp32→bf16, or →fp8 with per-block scales)
 before the all-reduce, the rounding residual is NOT discarded — it is kept in
-a local per-leaf compensation buffer (exactly a Kahan/Collage-light residual)
-and added back into the next step's gradient. This keeps the *accumulated*
+a local compensation buffer (exactly a Kahan/Collage-light residual) and
+added back into the next step's gradient. This keeps the *accumulated*
 gradient error O(ulp) instead of O(steps·ulp), the same argument as Paper
-§4.2 for the second moment.
+§4.2 for the second moment. "To FP8 and Back Again" (arXiv:2405.18710)
+documents the failure mode this prevents: silently lossy gradient
+communication destabilizes training even when the compute path is sound.
 
-Cuts inter-pod all-reduce bytes 2× (bf16) / 4× (fp8) — on the pod axis (DCN
-or weak ICI) this is the dominant collective term for train_4k cells (see
-EXPERIMENTS.md §Perf).
+Residual dtype (load-bearing): the residual must EXACTLY represent the
+quantization error or the error feedback itself leaks.
+  * bf16 target, bf16 values: ``g + err`` is a sum of two bf16 numbers, and
+    the rounding error of RN(a+b) for same-format a, b is representable in
+    that format (Knuth/TwoSum) — bf16 residual is exact.
+  * fp8 targets (and mixed-dtype inputs): the error of rounding onto the
+    scaled fp8 grid spans far more mantissa bits than bf16 holds; the
+    residual is kept in f32 (``residual_dtype``). Storing it in bf16 — the
+    old behaviour — silently re-rounds the compensation and the "error-free"
+    feedback drifts O(steps·ulp).
+
+fp8 uses per-block scaling at ``BLOCK = 512`` granularity: each block is
+scaled so its amax maps onto the top of the fp8 grid, quantized, and shipped
+with its (tiny, f32) scale vector. Under a psum the scales are first shared
+with a ``pmax`` so every device quantizes onto the SAME grid — summing fp8
+payloads quantized under different scales is meaningless — and the grid gets
+``1/n_dev`` headroom so the reduction cannot overflow the fp8 range.
+
+Two execution granularities:
+  * leaf-wise (``compress_tree`` / ``pmean_compressed``): one quantize +
+    collective per gradient leaf — the reference path, O(leaves) collectives.
+  * bucket-wise (``pmean_compressed_buckets`` / ``psum_scatter_compressed_
+    buckets``): one quantize/psum/dequantize per dtype bucket of the PR-1
+    engine layout (core.bucketing); the residual buffer lives bucket-resident
+    in ``BucketedOptState.grad_err``. This is what the sharded train-step
+    engine (train/sharded.py) uses — collective count is O(buckets), not
+    O(leaves) (asserted by benchmarks/train_step.py).
+
+Cuts dp all-reduce bytes 2× (bf16) / ~4× (fp8 + scales) — on the pod axis
+(DCN or weak ICI) this is the dominant collective term for train_4k cells.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mcf
+from repro.core import bucketing, mcf
 
 BLOCK = 512  # per-block scaling granularity for fp8
 
+# Largest finite value on the reduce_precision (eb, mb) IEEE grid — this is
+# what mcf.StrictFPU.rn rounds onto. Note e4m3fn's *storage* max (448) is
+# larger, which gives the summed payload extra overflow headroom for free.
+_FP8_GRID_MAX = {
+    jnp.dtype(jnp.float8_e4m3fn): 240.0,     # (2 − 2⁻³)·2⁷
+    jnp.dtype(jnp.float8_e5m2): 57344.0,     # (2 − 2⁻²)·2¹⁴
+}
 
-def init_error_state(grads_template: Any) -> Any:
-    return jax.tree_util.tree_map(
-        lambda g: jnp.zeros(g.shape, jnp.bfloat16), grads_template)
+_SPECS = {
+    "none": (None, False),
+    "bf16": (jnp.bfloat16, False),
+    "bf16_ef": (jnp.bfloat16, True),
+    "fp8": (jnp.float8_e4m3fn, False),
+    "fp8_ef": (jnp.float8_e4m3fn, True),
+    "fp8e5_ef": (jnp.float8_e5m2, True),
+}
 
+
+def parse_spec(name: str):
+    """'bf16' | 'bf16_ef' | 'fp8' | 'fp8_ef' | … → (dtype | None, use_ef)."""
+    if name not in _SPECS:
+        raise ValueError(f"unknown grad_compression {name!r}; "
+                         f"one of {sorted(_SPECS)}")
+    dt, ef = _SPECS[name]
+    return (jnp.dtype(dt) if dt is not None else None), ef
+
+
+def is_fp8(dtype) -> bool:
+    return jnp.dtype(dtype) in _FP8_GRID_MAX
+
+
+def residual_dtype(dtype, value_dtype):
+    """Dtype that exactly represents the quantization residual.
+
+    bf16 target fed bf16 values: exact by the TwoSum representability
+    theorem. Everything else (fp8 targets, f32 inputs): f32."""
+    dtype = jnp.dtype(dtype)
+    if not is_fp8(dtype) and jnp.dtype(value_dtype) == dtype:
+        return dtype
+    return jnp.dtype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# quantization primitives
+# --------------------------------------------------------------------------
+
+def _blocked(x32: jax.Array):
+    """Flatten + zero-pad to a BLOCK multiple → ((nb, BLOCK), orig_size)."""
+    flat = x32.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, BLOCK), n
+
+
+def block_amax(g32: jax.Array) -> jax.Array:
+    """Per-BLOCK amax of |g32| (flattened), shape (nb,) f32."""
+    blocks, _ = _blocked(g32.astype(jnp.float32))
+    return jnp.max(jnp.abs(blocks), axis=1)
+
+
+def fp8_scale(amax: jax.Array, dtype, headroom: float = 1.0) -> jax.Array:
+    """Per-block scale mapping amax → grid_max / headroom (≥ tiny)."""
+    gmax = _FP8_GRID_MAX[jnp.dtype(dtype)]
+    return jnp.maximum(amax, jnp.float32(1e-30)) * (headroom / gmax)
+
+
+def quantize(g32: jax.Array, dtype, scale: Optional[jax.Array] = None):
+    """RN ``g32`` onto the ``dtype`` grid.
+
+    Returns (payload in ``dtype`` — what the collective ships, deq32 — the
+    f32 value the payload represents). fp8 targets require the per-block
+    ``scale`` (nb,) from :func:`fp8_scale`; bf16/f16 use the global grid."""
+    f = mcf.fpu(dtype)
+    if not is_fp8(dtype):
+        q32 = f.rn(g32.astype(jnp.float32))
+        return f.store(q32), q32
+    gmax = _FP8_GRID_MAX[jnp.dtype(dtype)]
+    blocks, n = _blocked(g32.astype(jnp.float32))
+    q32 = jnp.clip(f.rn(blocks / scale[:, None]), -gmax, gmax)
+    deq32 = (q32 * scale[:, None]).reshape(-1)[:n].reshape(g32.shape)
+    payload = f.store(q32).reshape(-1)[:n].reshape(g32.shape)
+    return payload, deq32
+
+
+def dequantize(payload: jax.Array, dtype,
+               scale: Optional[jax.Array] = None) -> jax.Array:
+    """payload (``dtype``) → f32 values (applies per-block scales for fp8)."""
+    if not is_fp8(dtype):
+        return payload.astype(jnp.float32)
+    blocks, n = _blocked(payload.astype(jnp.float32))
+    return (blocks * scale[:, None]).reshape(-1)[:n].reshape(payload.shape)
+
+
+# --------------------------------------------------------------------------
+# local round-trip (library path / single device: models the wire loss)
+# --------------------------------------------------------------------------
 
 def compress_decompress(g: jax.Array, err: Optional[jax.Array],
                         dtype=jnp.bfloat16):
-    """Round-trip a gradient leaf through ``dtype`` with error feedback.
+    """Round-trip a gradient array through ``dtype`` with error feedback.
 
-    Returns (quantized-as-f32 value to feed the all-reduce, new residual).
-    The actual all-reduce ships the low-precision payload; under GSPMD we
-    model it by inserting the quantization around the psum — the collective
-    operand dtype in the lowered HLO is ``dtype`` (checked in tests)."""
-    f = mcf.fpu(dtype)
+    Returns (dequantized f32 value — on the quantization grid, new residual).
+    No collective: this is the dp=1 / plain-GSPMD modeling path; the sharded
+    engine uses :func:`pmean_compressed` and friends, which ship the actual
+    low-precision payload through the collective."""
     g32 = g.astype(jnp.float32)
     if err is not None:
         g32 = g32 + err.astype(jnp.float32)
-    q = f.rn(g32)
-    resid = (g32 - q).astype(jnp.bfloat16)   # exact for bf16 target
-    return f.store(q), resid
+    if is_fp8(dtype):
+        scale = fp8_scale(block_amax(g32), dtype)
+        _, deq32 = quantize(g32, dtype, scale)
+    else:
+        _, deq32 = quantize(g32, dtype)
+    resid = (g32 - deq32).astype(residual_dtype(dtype, g.dtype))
+    return deq32, resid
+
+
+def init_error_state(grads_template: Any, dtype=jnp.bfloat16) -> Any:
+    """Zero EF residuals, built from the *gradient* structure.
+
+    The template must be grads-shaped (identical to params for the tree
+    layout; a BucketedParams for the bucket layout — for which the result is
+    a plain tuple of per-bucket residual rows, the form stored in
+    ``BucketedOptState.grad_err`` with a leading per-device dim)."""
+    if isinstance(grads_template, bucketing.BucketedParams):
+        return tuple(
+            jnp.zeros((1, b.padded),
+                      residual_dtype(dtype, jnp.dtype(b.dtype)))
+            for b in grads_template.layout.buckets)
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, residual_dtype(dtype, g.dtype)),
+        grads_template)
 
 
 def compress_tree(grads: Any, err_state: Optional[Any],
                   dtype=jnp.bfloat16) -> tuple[Any, Any]:
-    """Apply error-feedback compression leafwise over the grad pytree."""
-    if err_state is None:
-        err_state = jax.tree_util.tree_map(lambda g: None, grads,
-                                           is_leaf=lambda x: x is None)
+    """Leaf-wise local round-trip over a grad pytree (no collectives).
+
+    Returns (dequantized grads cast back to each leaf's dtype, residuals)."""
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
-    flat_e = treedef.flatten_up_to(err_state)
+    if err_state is None:
+        flat_e = [None] * len(flat_g)
+    else:
+        flat_e = treedef.flatten_up_to(err_state)
     qs, es = [], []
     for g, e in zip(flat_g, flat_e):
-        q, r = compress_decompress(g, e, dtype)
-        qs.append(q)
+        deq, r = compress_decompress(g, e, dtype)
+        qs.append(deq.astype(g.dtype))
         es.append(r)
     return treedef.unflatten(qs), treedef.unflatten(es)
+
+
+# --------------------------------------------------------------------------
+# collective-fused paths (shard_map): the payload on the wire IS `dtype`
+# --------------------------------------------------------------------------
+
+def _psum(x, axis):
+    return jax.lax.psum(x, axis) if axis is not None else x
+
+
+def pmean_compressed(g: jax.Array, err: Optional[jax.Array], dtype, axis,
+                     n_dev: int):
+    """EF-compressed mean-all-reduce of one array over shard_map ``axis``.
+
+    quantize(g+err) → psum of the ``dtype`` payload → dequantize/n. For fp8
+    the per-block scales are shared first (pmax) so all devices quantize
+    onto one grid, with 1/n_dev headroom so the sum stays on-range; the
+    scale vector is BLOCK× smaller than the payload. ``axis=None``
+    degenerates to the local round-trip (n_dev must be 1).
+
+    Returns (mean32, new_residual)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err.astype(jnp.float32)
+    if is_fp8(dtype):
+        amax = block_amax(g32)
+        if axis is not None:
+            amax = jax.lax.pmax(amax, axis)
+        scale = fp8_scale(amax, dtype, headroom=float(n_dev))
+        payload, deq32 = quantize(g32, dtype, scale)
+        summed = _psum(payload, axis)
+        mean32 = dequantize(summed, dtype, scale) / n_dev
+    else:
+        payload, deq32 = quantize(g32, dtype)
+        summed = _psum(payload, axis)
+        mean32 = summed.astype(jnp.float32) / n_dev
+    resid = (g32 - deq32).astype(residual_dtype(dtype, g.dtype))
+    return mean32, resid
+
+
+def psum_scatter_compressed(g: jax.Array, err: Optional[jax.Array], dtype,
+                            axis, n_dev: int):
+    """ZeRO variant: quantize the full local gradient, reduce-scatter the
+    ``dtype`` payload along dim 0, dequantize the owned shard.
+
+    The residual stays FULL-length — it is this device's compressor state
+    and covers every element it quantized, including those reduced onto
+    other devices' shards. Requires 1-D ``g`` with len % n_dev == 0.
+
+    Returns (mean32 shard (len/n_dev,), new full-length residual)."""
+    assert g.ndim == 1 and g.shape[0] % n_dev == 0, (g.shape, n_dev)
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err.astype(jnp.float32)
+    if is_fp8(dtype):
+        # each shard must be whole scaling blocks: nb floors otherwise and
+        # the wrong-sized scale vector would broadcast — silent corruption,
+        # not an error (sharding.bucket_pad_multiple(mesh, BLOCK) sizes
+        # bucket layouts correctly)
+        assert (g.shape[0] // n_dev) % BLOCK == 0, (g.shape, n_dev, BLOCK)
+        amax = block_amax(g32)
+        if axis is not None:
+            amax = jax.lax.pmax(amax, axis)
+        scale = fp8_scale(amax, dtype, headroom=float(n_dev))
+        payload, deq32 = quantize(g32, dtype, scale)
+        shard = jax.lax.psum_scatter(payload, axis, scatter_dimension=0,
+                                     tiled=True)
+        # the shard's blocks are a contiguous run of the full block vector
+        nb = scale.shape[0] // n_dev
+        idx = jax.lax.axis_index(axis)
+        shard_scale = jax.lax.dynamic_slice(scale, (idx * nb,), (nb,))
+        mean32 = dequantize(shard, dtype, shard_scale) / n_dev
+    else:
+        payload, deq32 = quantize(g32, dtype)
+        shard = jax.lax.psum_scatter(payload, axis, scatter_dimension=0,
+                                     tiled=True)
+        mean32 = shard.astype(jnp.float32) / n_dev
+    resid = (g32 - deq32).astype(residual_dtype(dtype, g.dtype))
+    return mean32, resid
+
+
+def pmean_compressed_tree(grads: Any, err_tree: Optional[Any], dtype,
+                          axis, n_dev: int):
+    """Leaf-wise EF-compressed mean over ``axis`` — the O(leaves)
+    baseline the bucket-granular path is benchmarked against. Returns
+    (grads cast back to each leaf's dtype, residual tree)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree) if err_tree is not None \
+        else [None] * len(flat_g)
+    qs, es = [], []
+    for g, e in zip(flat_g, flat_e):
+        m, r = pmean_compressed(g, e, dtype, axis, n_dev)
+        qs.append(m.astype(g.dtype))
+        es.append(r)
+    return treedef.unflatten(qs), treedef.unflatten(es)
+
+
+def pmean_compressed_buckets(gdata: Sequence[jax.Array],
+                             err: Optional[Sequence[jax.Array]], dtype,
+                             axis, n_dev: int):
+    """Bucket-granular compressed mean: ONE quantize/psum/dequantize per
+    dtype bucket (vs one per leaf) — the engine's fast path."""
+    if err is None:
+        err = [None] * len(gdata)
+    means, resids = [], []
+    for g, e in zip(gdata, err):
+        m, r = pmean_compressed(g, e, dtype, axis, n_dev)
+        means.append(m.astype(g.dtype))
+        resids.append(r)
+    return tuple(means), tuple(resids)
+
+
+def psum_scatter_compressed_buckets(gdata: Sequence[jax.Array],
+                                    err: Optional[Sequence[jax.Array]],
+                                    dtype, axis, n_dev: int):
+    """ZeRO bucket path: per bucket, reduce-scatter the compressed payload;
+    each device receives exactly its owned flat-axis shard of the mean."""
+    if err is None:
+        err = [None] * len(gdata)
+    shards, resids = [], []
+    for g, e in zip(gdata, err):
+        m, r = psum_scatter_compressed(g, e, dtype, axis, n_dev)
+        shards.append(m.astype(g.dtype))
+        resids.append(r)
+    return tuple(shards), tuple(resids)

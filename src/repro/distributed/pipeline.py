@@ -6,10 +6,18 @@ for dp/tp over DCN).
 
 Mechanics: the layer-stacked params of a uniform decoder group are split
 into S stage chunks (leading dim sharded over the pipeline axis);
-``shard_map`` runs the classic (n_micro + S − 1)-tick schedule, shifting
-activations stage→stage with ``lax.ppermute``. Bubble fraction =
-(S−1)/(n_micro+S−1). Differentiable end-to-end (ppermute's transpose is the
-reverse permute) — tested with jax.grad against the unpipelined stack.
+``stage_schedule`` runs the classic (n_micro + S − 1)-tick schedule on each
+device, shifting activations stage→stage with ``lax.ppermute``. Bubble
+fraction = (S−1)/(n_micro+S−1). Differentiable end-to-end (ppermute's
+transpose is the reverse permute) — tested with jax.grad against the
+unpipelined stack, both through ``pipeline_apply``'s own shard_map and
+inline inside the sharded train-step engine's shard_map
+(train/sharded.py — where stage params arrive already chunked via a
+``P(axis)`` in_spec on the stacked-layer dim, no reshape needed).
+
+``pipeline_apply`` remains the standalone wrapper (its own shard_map over
+``axis``); the engine calls ``stage_schedule`` directly because shard_map
+regions do not nest.
 """
 from __future__ import annotations
 
@@ -30,6 +38,42 @@ def split_stages(stacked_params, n_stages: int):
     return jax.tree_util.tree_map(f, stacked_params)
 
 
+def stage_schedule(body_fn: Callable, stage_params, xs_local, *, axis: str,
+                   n_stages: int):
+    """Per-device GPipe schedule: MUST run inside a shard_map that has the
+    named ``axis`` of size ``n_stages``.
+
+    body_fn(stage_params, x) applies this stage's layer chunk to one
+    microbatch x (mb, L, D); ``stage_params`` leaves carry the local
+    (L/S, ...) layer dim; ``xs_local`` is (n_micro, mb, L, D) — replicated
+    input microbatches (only stage 0 actually feeds them in). Returns the
+    (n_micro, mb, L, D) outputs, psum-broadcast to every stage."""
+    S = n_stages
+    n_micro = xs_local.shape[0]
+    n_ticks = n_micro + S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+    stage = jax.lax.axis_index(axis)
+    zero = jnp.zeros_like(xs_local[0])
+
+    def tick(carry, t):
+        buf = carry
+        feed = jnp.where(t < n_micro,
+                         xs_local[jnp.minimum(t, n_micro - 1)], zero)
+        inp = jnp.where(stage == 0, feed, buf)
+        out = body_fn(stage_params, inp)
+        nxt = jax.lax.ppermute(out, axis, perm)
+        # emit this tick's output only if we are the last stage and the
+        # tick corresponds to a real microbatch
+        emit = jnp.where((stage == S - 1) & (t >= S - 1), out, zero)
+        return nxt, emit
+
+    _, emits = jax.lax.scan(tick, zero, jnp.arange(n_ticks))
+    # microbatch m completed at tick m + S - 1 on the last stage;
+    # psum of the masked emits broadcasts them to every stage
+    outs = emits[S - 1:]
+    return jax.lax.psum(outs, axis)
+
+
 def pipeline_apply(body_fn: Callable, staged_params, x_micro, *,
                    mesh: Mesh, axis: str = "pod"):
     """Run x_micro (n_micro, mb, L, D) through the S-stage pipeline.
@@ -37,33 +81,12 @@ def pipeline_apply(body_fn: Callable, staged_params, x_micro, *,
     body_fn(stage_params, x) applies that stage's layer chunk (stage_params
     leaves have the (L/S, ...) layer dim). Returns (n_micro, mb, L, D)."""
     S = mesh.shape[axis]
-    n_micro = x_micro.shape[0]
-    n_ticks = n_micro + S - 1
-    perm = [(i, (i + 1) % S) for i in range(S)]
 
     def per_stage(params_local, xs_local):
         # params_local leaves: (1, L/S, ...) — drop the stage dim
         params_local = jax.tree_util.tree_map(lambda p: p[0], params_local)
-        stage = jax.lax.axis_index(axis)
-        zero = jnp.zeros_like(xs_local[0])
-
-        def tick(carry, t):
-            buf = carry
-            feed = jnp.where(t < n_micro,
-                             xs_local[jnp.minimum(t, n_micro - 1)], zero)
-            inp = jnp.where(stage == 0, feed, buf)
-            out = body_fn(params_local, inp)
-            nxt = jax.lax.ppermute(out, axis, perm)
-            # emit this tick's output only if we are the last stage and the
-            # tick corresponds to a real microbatch
-            emit = jnp.where((stage == S - 1) & (t >= S - 1), out, zero)
-            return nxt, emit
-
-        _, emits = jax.lax.scan(tick, zero, jnp.arange(n_ticks))
-        # microbatch m completed at tick m + S - 1 on the last stage;
-        # psum of the masked emits broadcasts them to every stage
-        outs = emits[S - 1:]
-        return jax.lax.psum(outs, axis)
+        return stage_schedule(body_fn, params_local, xs_local,
+                              axis=axis, n_stages=S)
 
     from jax.experimental.shard_map import shard_map
     spec_p = jax.tree_util.tree_map(lambda _: P(axis), staged_params)

@@ -146,22 +146,38 @@ def bucket_spec(leaf, mesh: Mesh, fsdp: bool = True) -> P:
     return P(dp) if n > 1 and leaf.shape[0] % n == 0 else P()
 
 
-def bucket_pad_multiple(mesh: Mesh) -> int:
+def bucket_pad_multiple(mesh: Mesh, block: int = 1) -> int:
     """Layout pad_multiple that keeps every bucket dividing both the VMEM
-    tile (8×128) and the mesh's dp axes — pass to BucketPolicy."""
+    tile (8×128) and the mesh's dp axes — pass to BucketPolicy.
+
+    ``block``: quantization block size of the compressed gradient collective
+    (compression.BLOCK for fp8) — each device's ZeRO flat-axis shard must
+    itself be a whole number of blocks so the reduce-scattered payload's
+    per-block scales stay shard-aligned."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = _dp_axes(mesh)
     n = 1
     for a in (dp if isinstance(dp, tuple) else (dp,)):
         if a:
             n *= sizes[a]
-    return math.lcm(bucketing.PAD_DEFAULT, n)
+    return math.lcm(bucketing.PAD_DEFAULT, n * block)
+
+
+def _is_grad_err_leaf(path) -> bool:
+    """EF-compression residual leaf (per-device compressor state with a
+    leading dp-device dim) — used by the sharded engine's spec rules
+    (train/sharded.py). Both TrainState and BucketedOptState register with
+    key paths so the ``grad_err`` attribute is visible here."""
+    return any(isinstance(e, jax.tree_util.GetAttrKey)
+               and e.name == "grad_err" for e in path)
 
 
 def state_shardings(abstract_tree: Any, mesh: Mesh, fsdp: bool = True,
                     tp_mode: str = "full") -> Any:
     """NamedShardings for a TrainState/params pytree (path-rule based);
-    bucketed leaves get the flat-axis FSDP spec."""
+    bucketed leaves get the flat-axis FSDP spec. (The sharded engine's
+    per-device grad_err rows are spec'd by train/sharded.py's own
+    state_pspecs, not here — this is the GSPMD/pjit path.)"""
     def leaf_fn(path, leaf):
         if _is_bucket_leaf(path, leaf):
             return NamedSharding(mesh, bucket_spec(leaf, mesh, fsdp))

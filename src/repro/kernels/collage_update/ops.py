@@ -144,7 +144,7 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
         vlo=tuple(new["vlo"]) if "vlo" in fields else bstate.vlo,
         delta=tuple(new["delta"]) if "delta" in fields else bstate.delta,
         master=tuple(new["master"]) if "master" in fields else bstate.master,
-        rng=bstate.rng, layout=layout)
+        rng=bstate.rng, layout=layout, grad_err=bstate.grad_err)
     new_params = bucketing.BucketedParams(tuple(new["theta"]), layout)
     return new_params, new_state, metrics
 

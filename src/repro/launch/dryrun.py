@@ -11,6 +11,14 @@ record memory/cost/collective analysis for §Dry-run and §Roofline.
       --shape train_4k [--multi-pod] [--precision C] [--force]
   PYTHONPATH=src python -m repro.launch.dryrun --all
 
+Variant keys (--variant k=v,k=v — see parse_variant): attn/accum/remat/
+fsdp/tpmode/sp/compress plus the shard_map engine switches:
+  engine=sharded   lower train cells through train/sharded.py
+                   (explicit, compressible gradient collectives)
+  bucketed=1       flat-bucket params/opt state + ZeRO bucket sharding
+  compress=bf16_ef|fp8_ef   compressed dp collective (payload dtype on
+                   the wire; GSPMD cells only model the round-trip)
+
 Results are cached as JSON under experiments/dryrun/<mesh>/<arch>__<shape>.json
 (re-runs skip cached cells unless --force): the roofline/benchmark layers
 read these artifacts instead of recompiling.
@@ -26,11 +34,13 @@ import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, SHAPES, get_config
 from repro.core.collage import CollageAdamW
-from repro.core.precision import PrecisionPolicy, parse_strategy
+from repro.core.precision import BucketPolicy, PrecisionPolicy, parse_strategy
+from repro.distributed import compression
 from repro.distributed import sharding as shard_lib
 from repro.launch.mesh import HW, make_production_mesh
 from repro.models.model import build_model
 from repro.models.transformer import activation_sharding
+from repro.train import sharded as sharded_lib
 from repro.train import train_loop
 from repro.utils import hlo_analysis
 
@@ -98,15 +108,65 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
     for a in ("pod", "data"):
         n_dp *= sizes.get(a, 1)
 
+    engine = overrides.get("engine", "gspmd")   # gspmd | sharded
+    bucketed = overrides.get("bucketed", "0") == "1"
+    bucket_policy = BucketPolicy(
+        enabled=bucketed,
+        pad_multiple=shard_lib.bucket_pad_multiple(mesh, block=compression.BLOCK)) \
+        if bucketed else BucketPolicy()
     opt = CollageAdamW(1e-4, b2=0.95, weight_decay=0.1,
-                       policy=PrecisionPolicy(strategy=parse_strategy(precision)))
+                       policy=PrecisionPolicy(
+                           strategy=parse_strategy(precision),
+                           bucketing=bucket_policy))
     tp_mode = overrides.get("tpmode", "full")
     sp = overrides.get("sp", "0") == "1"
     grad_compression = overrides.get("compress", "none")
 
-    sharder = shard_lib.make_activation_sharder(mesh, sp=sp)
+    # the shard_map engine owns its mesh axes manually — GSPMD activation
+    # constraints inside the manual region are invalid (and unnecessary:
+    # activations are already per-device)
+    sharder = None if engine == "sharded" else \
+        shard_lib.make_activation_sharder(mesh, sp=sp)
     with mesh, activation_sharding(sharder):
-        if shape.mode == "train":
+        if shape.mode == "train" and engine == "sharded":
+            # shard_map engine (train/sharded.py): dp over the data(+pod)
+            # axes, ZeRO bucket sharding when bucketed, real compressed
+            # gradient collectives (the GSPMD path below can only model
+            # the compression locally)
+            dp_axes = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names)
+            axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+            zero = bucketed and isinstance(axis, str)
+            n_acc, mb_global = accum_plan(cfg, shape, n_dp)
+            if "accum" in overrides:
+                n_acc = int(overrides["accum"])
+                mb_global = shape.global_batch // n_acc
+            state_abs = jax.eval_shape(
+                lambda: sharded_lib.init_state(
+                    model, opt, jax.random.PRNGKey(0), mesh, axis=axis,
+                    grad_compression=grad_compression))
+            sspecs = sharded_lib.state_pspecs(state_abs, axis=axis,
+                                              zero_shard=zero)
+            state_sh = sharded_lib.named_shardings(state_abs, sspecs, mesh)
+            batch_abs = model.input_specs(shape)
+            batch_abs = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(
+                    (n_acc, x.shape[0] // n_acc) + x.shape[1:], x.dtype)
+                if x.ndim else x, batch_abs)
+            batch_sh = sharded_lib.named_shardings(
+                batch_abs, sharded_lib.batch_pspecs(batch_abs, axis=axis),
+                mesh)
+            step = sharded_lib.make_sharded_train_step(
+                model, opt, mesh, axis=axis, remat=remat,
+                grad_compression=grad_compression, zero_shard=zero,
+                jit=False)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+            meta = {"grad_accum": n_acc, "microbatch_global": mb_global,
+                    "engine": "sharded", "zero_shard": zero}
+        elif shape.mode == "train":
             n_acc, mb_global = accum_plan(cfg, shape, n_dp)
             if "accum" in overrides:
                 n_acc = int(overrides["accum"])

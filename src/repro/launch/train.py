@@ -3,6 +3,13 @@ dry-run lowers for the production meshes).
 
   PYTHONPATH=src python -m repro.launch.train --arch gpt-tiny --steps 200 \
       --precision C [--resume] [--smoke]
+
+Distributed (shard_map engine, train/sharded.py): ``--dp N`` runs the
+data-parallel sharded step (+ ``--zero`` for ZeRO bucket sharding with
+``--bucketed``, ``--pipeline-stages S`` for the GPipe schedule on uniform
+decoder stacks). On CPU this needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=<dp·stages>`` exported
+BEFORE launch (jax locks the device count at first use).
 """
 from __future__ import annotations
 
@@ -18,8 +25,11 @@ from repro.configs.base import ShapeConfig
 from repro.core.collage import CollageAdamW, cosine_schedule
 from repro.core.precision import BucketPolicy, PrecisionPolicy, parse_strategy
 from repro.data.synthetic import make_batch_fn
+from repro.distributed import compression
+from repro.distributed import sharding as shard_lib
 from repro.models.model import build_model
 from repro.train import checkpoint as ckpt_lib
+from repro.train import sharded
 from repro.train import train_loop
 from repro.train.elastic import RunSupervisor, SupervisorConfig
 
@@ -28,18 +38,40 @@ def build(args):
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
     model = build_model(cfg)
+    mesh = None
+    pipeline_axis = "pipe" if args.pipeline_stages > 1 else None
+    if args.dp > 1 or pipeline_axis:
+        if pipeline_axis:
+            mesh = jax.make_mesh((args.pipeline_stages, args.dp),
+                                 ("pipe", "data"))
+        else:
+            mesh = jax.make_mesh((args.dp,), ("data",))
+    pad = shard_lib.bucket_pad_multiple(mesh, block=compression.BLOCK) if mesh is not None \
+        else None
+    bucket_policy = BucketPolicy(enabled=args.bucketed) if pad is None else \
+        BucketPolicy(enabled=args.bucketed, pad_multiple=pad)
     policy = PrecisionPolicy(strategy=parse_strategy(args.precision),
-                             bucketing=BucketPolicy(enabled=args.bucketed))
+                             bucketing=bucket_policy)
     opt = CollageAdamW(
         cosine_schedule(args.lr, args.warmup, args.steps),
         b1=0.9, b2=args.b2, weight_decay=args.weight_decay, policy=policy,
         compute_metrics=not args.no_metrics,
         use_fused_kernel=args.fused_kernel, sr_seed=args.sr_seed)
-    step_fn = jax.jit(train_loop.make_train_step(
-        model, opt, microbatch=args.microbatch, remat=args.remat,
-        grad_compression=args.grad_compression))
+    if mesh is not None:
+        # explicit --zero passes True so the engine can reject invalid
+        # combinations loudly; absent → None lets it auto-enable for
+        # bucketed dp>1 layouts
+        step_fn = sharded.make_sharded_train_step(
+            model, opt, mesh, axis="data", microbatch=args.microbatch,
+            remat=args.remat, grad_compression=args.grad_compression,
+            zero_shard=True if args.zero else None,
+            pipeline_axis=pipeline_axis)
+    else:
+        step_fn = jax.jit(train_loop.make_train_step(
+            model, opt, microbatch=args.microbatch, remat=args.remat,
+            grad_compression=args.grad_compression))
     batch_fn = make_batch_fn(cfg, shape, seed=args.seed)
-    return cfg, model, opt, step_fn, batch_fn
+    return cfg, model, opt, step_fn, batch_fn, mesh, pipeline_axis
 
 
 def main(argv=None):
@@ -59,6 +91,16 @@ def main(argv=None):
     ap.add_argument("--fused-kernel", action="store_true")
     ap.add_argument("--bucketed", action="store_true",
                     help="persistent flat-bucket params/opt-state (DESIGN.md §5)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel devices for the shard_map engine "
+                         "(train/sharded.py); 1 = single-program step")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-shard the flat buckets over the dp axis "
+                         "(needs --bucketed)")
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="GPipe stages over a 'pipe' mesh axis (uniform "
+                         "decoder stacks; batch is chunked to --microbatch "
+                         "rows per microbatch)")
     ap.add_argument("--sr-seed", type=int, default=0,
                     help="stochastic-rounding noise seed (--precision SR)")
     ap.add_argument("--no-metrics", action="store_true")
@@ -71,9 +113,32 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
-    cfg, model, opt, step_fn, batch_fn = build(args)
-    state = train_loop.init_state(model, opt, jax.random.PRNGKey(args.seed),
-                                  args.grad_compression)
+    cfg, model, opt, step_fn, batch_fn, mesh, pipeline_axis = build(args)
+    if mesh is not None:
+        state = sharded.init_state(model, opt, jax.random.PRNGKey(args.seed),
+                                   mesh, axis="data",
+                                   grad_compression=args.grad_compression)
+        zero_eff = args.zero or (args.bucketed and args.dp > 1
+                                 and pipeline_axis is None)
+        state = sharded.device_put_state(
+            state, mesh, axis="data", zero_shard=zero_eff,
+            pipeline_axis=pipeline_axis)
+        if pipeline_axis is not None and not args.microbatch:
+            raise SystemExit("--pipeline-stages needs --microbatch (the "
+                             "GPipe schedule consumes (n_micro, mb, L) "
+                             "chunked batches)")
+        if pipeline_axis is not None:
+            raw_batch_fn = batch_fn
+            mb = args.microbatch
+
+            def batch_fn(i):   # noqa: F811 — pipeline wants (n, mb, L)
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape((x.shape[0] // mb, mb) + x.shape[1:]),
+                    raw_batch_fn(i))
+    else:
+        state = train_loop.init_state(model, opt,
+                                      jax.random.PRNGKey(args.seed),
+                                      args.grad_compression)
     start = 0
     if args.resume:
         latest = ckpt_lib.latest_step(args.ckpt_dir)

@@ -148,6 +148,23 @@ class Model:
             aux = aux + a
         return self._head(params, x), aux
 
+    @staticmethod
+    def token_ce(logits, labels) -> jax.Array:
+        """Next-token cross entropy (fp32) from full-sequence logits.
+
+        Shapes (..., L, V) vs (..., L) — any leading batch/microbatch dims.
+        The single definition of the training objective: ``loss`` and the
+        sharded engine's pipelined loss (train/sharded.py) both call it, so
+        masking/shift changes cannot silently diverge between paths."""
+        logits = logits[..., :-1, :]
+        targets = labels[..., 1:]
+        mask = (targets >= 0).astype(ACC)
+        logp = jax.nn.log_softmax(logits.astype(ACC), axis=-1)
+        ll = jnp.take_along_axis(
+            logp, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        return -(ll * mask).sum() / ntok
+
     def loss(self, params, batch, remat: str = "none"):
         """Next-token cross entropy (fp32), MoE aux added; returns
         (loss, metrics_dict)."""
@@ -155,15 +172,7 @@ class Model:
         logits, aux = self.forward(params, batch, remat=remat)
         if cfg.family == "vlm":   # loss only on the text segment
             logits = logits[:, batch["frontend"].shape[1]:]
-        labels = batch["labels"]
-        logits = logits[:, :-1]
-        targets = labels[:, 1:]
-        mask = (targets >= 0).astype(ACC)
-        logp = jax.nn.log_softmax(logits.astype(ACC), axis=-1)
-        ll = jnp.take_along_axis(
-            logp, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
-        ntok = jnp.maximum(mask.sum(), 1.0)
-        ce = -(ll * mask).sum() / ntok
+        ce = self.token_ce(logits, batch["labels"])
         total = ce + 0.01 * aux
         return total, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}
 

@@ -11,10 +11,12 @@ What is real here vs simulated (single-host container — DESIGN.md §4):
 
 Straggler mitigation policy (1000+ node scale):
   1. per-step deadline = p99(recent step times) × slack (default 3×);
-  2. a missed deadline marks the step failed, the supervisor restores the
-     last checkpoint, excludes the slow host from the host list, and
-     relaunches with a smaller `data` axis (elastic down-scale) — the
-     counter-based data sharding re-slices automatically;
+  2. a missed deadline on a step that nonetheless COMPLETED keeps the
+     completed state (work is never discarded for lateness) and records the
+     faulting step in ``recoveries``/``stragglers`` — the re-mesh policy
+     (exclude the slow host, relaunch with a smaller `data` axis) keys off
+     these incident records; only a real crash restores the last
+     checkpoint — the counter-based data sharding re-slices automatically;
   3. recovered hosts rejoin at the next checkpoint boundary (up-scale).
 """
 from __future__ import annotations
@@ -39,13 +41,24 @@ class RunSupervisor:
     """Drives train steps with checkpointing + failure recovery.
 
     ``fault_hook(step)`` (tests) may raise to simulate a host crash; the
-    supervisor restores and continues, and records every recovery."""
+    supervisor restores and continues, and records every recovery.
+
+    ``recoveries`` records the FAULTING step of every incident (crash or
+    straggler) — not the checkpoint step it rolled back to, which is what
+    the old behaviour logged and which made incident forensics impossible
+    (every recovery within one ckpt window looked identical). Stragglers —
+    steps that finish late but *successfully* — keep their completed state:
+    rolling a finished step back to the last checkpoint (the old behaviour)
+    discarded up to ``ckpt_every`` steps of work on every deadline miss,
+    turning a transient slow host into a repeated loss of progress. Only
+    real crashes (exceptions out of the step) restore from checkpoint."""
 
     def __init__(self, cfg: SupervisorConfig, *,
                  fault_hook: Optional[Callable[[int], None]] = None):
         self.cfg = cfg
         self.fault_hook = fault_hook
-        self.recoveries: list[int] = []
+        self.recoveries: list[int] = []     # faulting step per incident
+        self.stragglers: list[int] = []     # subset: deadline misses
         self.step_times: list[float] = []
 
     def deadline(self) -> float:
@@ -69,22 +82,33 @@ class RunSupervisor:
                     self.fault_hook(step)
                 batch = batch_fn(step)
                 state, last_metrics = train_step(state, batch)
-                dt = time.monotonic() - t0
-                if dt > self.deadline():
-                    raise TimeoutError(f"straggler: step {step} took {dt:.3f}s")
-                self.step_times.append(dt)
-            except (RuntimeError, TimeoutError) as e:  # crash / straggler
+            except (RuntimeError, TimeoutError) as e:  # real crash
                 restore_step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
                 if restore_step is None:
                     raise RuntimeError("fault before first checkpoint") from e
+                self.recoveries.append(step)       # the FAULTING step
                 # layout-elastic: migrates bucketed states whose bucket
                 # partitioning changed with the re-scaled mesh (no-op for
                 # tree-layout states)
                 state, extra = ckpt_lib.restore_bucketed(
                     self.cfg.ckpt_dir, restore_step, template or state)
                 step = extra["step"]
-                self.recoveries.append(step)
                 continue
+            dt = time.monotonic() - t0
+            deadline = self.deadline()
+            if dt > deadline:
+                # late but SUCCESSFUL: the new state is valid — keep it and
+                # flag the incident (re-mesh policy hooks read these). The
+                # sample enters the p99 window CLAMPED to the deadline: a
+                # one-off outlier can't poison the window, but a genuine
+                # regime change (re-meshed smaller, slower hosts) ratchets
+                # the deadline up by ~slack× per window refresh instead of
+                # flagging every step forever.
+                self.recoveries.append(step)
+                self.stragglers.append(step)
+                self.step_times.append(deadline)
+            else:
+                self.step_times.append(dt)
             step += 1
             if step % self.cfg.ckpt_every == 0 or step == n_steps:
                 ckpt_lib.save(self.cfg.ckpt_dir, step, state,

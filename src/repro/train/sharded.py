@@ -1,0 +1,401 @@
+"""Sharded train-step engine: end-to-end shard_map data parallelism with
+ZeRO bucket sharding, bucket-granular compressed gradient collectives, and
+an opt-in GPipe stage schedule — DESIGN.md §4.
+
+Why shard_map and not plain pjit/GSPMD: under GSPMD the data-parallel
+gradient reduction is *implicit* (inserted by the partitioner inside the
+backward pass), so there is no seam to compress it at — the "compressed
+all-reduce" of the old train_loop path could only model the wire loss
+locally. Here the whole step body is a per-device program, the collective
+is an explicit ``psum``/``psum_scatter`` whose operand IS the compressed
+payload (asserted on the lowered HLO by tests/test_sharded_engine.py), and
+the error-feedback residual is honest per-device compressor state.
+
+Composition with the PR-1 bucket engine (core.bucketing):
+
+  * ZeRO state sharding — every flat bucket (params AND all optimizer
+    roles) is sharded along its single axis over the dp axis
+    (``sharding.bucket_pad_multiple`` makes the padded length divide). The
+    per-device body all-gathers the param buckets at the top of the step
+    (ZeRO-3 gather-at-use), computes full-size local gradients, and
+    reduce-scatters them so the purely elementwise optimizer update runs on
+    1/n_dp of every bucket.
+  * bucket-granular compression — ONE quantize → psum/psum_scatter →
+    dequantize per dtype bucket (vs one per leaf: O(buckets) collectives,
+    benchmarks/train_step.py), residual rows living in
+    ``BucketedOptState.grad_err`` with a leading per-device dim.
+  * tree layout still works (params replicated, leaf-wise collectives) —
+    it is the reference and the benchmark baseline.
+
+Pipeline (opt-in, ``pipeline_axis=``): uniform single-group decoder stacks
+run their layer scan through ``pipeline.stage_schedule`` inside the same
+shard_map — stage chunks arrive via a ``P(pipeline_axis)`` in_spec on the
+stacked-layer dim (no reshape), activations shift with ppermute, and the
+per-leaf gradient fixup (stage-local chunks / psum'd embedding / replicated
+head) happens before the dp reduction. Tree layout only; optimizer
+StepMetrics are zeroed in this mode (stage-partial norms don't combine
+post-hoc — ROADMAP open item).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bucketing
+from repro.core.collage import CollageAdamW, StepMetrics
+from repro.core.precision import Strategy
+from repro.distributed import compression
+from repro.distributed import pipeline as pp
+from repro.distributed import sharding as shard_lib
+from repro.models import transformer as tf
+from repro.models.layers import ACC, embed_lookup
+from repro.models.model import Model
+from repro.train import train_loop
+
+Axis = Union[str, tuple]
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    names = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _nones(k: int) -> tuple:
+    return (None,) * k
+
+
+def _in_groups(path) -> bool:
+    """Leaf belongs to the stacked decoder groups (dim 0 = layer stack)."""
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "groups"
+               for e in path)
+
+
+# --------------------------------------------------------------------------
+# PartitionSpecs (shard_map in/out_specs and device_put shardings)
+# --------------------------------------------------------------------------
+
+def state_pspecs(state: Any, *, axis: Axis, zero_shard: bool,
+                 pipeline_axis: Optional[str] = None) -> Any:
+    """PartitionSpecs for a TrainState under the engine.
+
+    grad_err leaves shard their leading per-device dim over ``axis``; ZeRO
+    buckets shard their flat axis; pipeline mode shards the stacked-layer
+    dim of decoder-group leaves (params and their co-shaped optimizer
+    state) over ``pipeline_axis``; everything else is replicated."""
+    def leaf_fn(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if shard_lib._is_grad_err_leaf(path) and nd >= 1:
+            return P(axis, *_nones(nd - 1))
+        if pipeline_axis is not None and _in_groups(path) and nd >= 1:
+            return P(pipeline_axis, *_nones(nd - 1))
+        if zero_shard and shard_lib._is_bucket_leaf(path, leaf):
+            return P(axis)
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf_fn, state)
+
+
+def batch_pspecs(batch: Any, *, axis: Axis) -> Any:
+    """Batch dim over the dp axis: dim 0 for (B, ...) leaves, dim 1 for
+    loader-side pre-chunked (n_micro, mb, ...) batches."""
+    chunked = batch["tokens"].ndim == 3
+
+    def leaf_fn(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return P()
+        if chunked:
+            return P(None, axis, *_nones(nd - 2))
+        return P(axis, *_nones(nd - 1))
+    return jax.tree_util.tree_map(leaf_fn, batch)
+
+
+def named_shardings(tree: Any, pspecs: Any, mesh: Mesh) -> Any:
+    del tree
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def init_state(model: Model, opt: CollageAdamW, key, mesh: Mesh, *,
+               axis: Axis = "data",
+               grad_compression: str = "none") -> train_loop.TrainState:
+    """TrainState with one EF-residual row per dp device (see
+    train_loop.init_state)."""
+    return train_loop.init_state(model, opt, key, grad_compression,
+                                 n_dp=_axis_size(mesh, axis))
+
+
+def device_put_state(state, mesh: Mesh, *, axis: Axis = "data",
+                     zero_shard: bool = False,
+                     pipeline_axis: Optional[str] = None):
+    specs = state_pspecs(state, axis=axis, zero_shard=zero_shard,
+                         pipeline_axis=pipeline_axis)
+    return jax.device_put(state, named_shardings(state, specs, mesh))
+
+
+# --------------------------------------------------------------------------
+# metrics plumbing
+# --------------------------------------------------------------------------
+
+_METRIC_KEYS = ("loss", "ce", "aux", "ppl", "edq", "update_norm",
+                "imprecision_pct", "grad_norm")
+
+
+def _metric_dict(loss, lmetrics, om: StepMetrics) -> dict:
+    return {"loss": loss, "ce": lmetrics["ce"], "aux": lmetrics["aux"],
+            "ppl": jnp.exp(lmetrics["ce"]),
+            "edq": om.edq, "update_norm": om.update_norm,
+            "imprecision_pct": om.imprecision_pct,
+            "grad_norm": om.grad_norm}
+
+
+def _combine_shard_metrics(m: StepMetrics, total: int, axis) -> StepMetrics:
+    """Re-finalize StepMetrics whose partial sums cover only this device's
+    ZeRO shard: un-finalize → psum → finalize. ``total`` is the full
+    unpadded parameter count (the denominator step_bucketed already used)."""
+    dot = m.edq * m.update_norm
+    lost = m.imprecision_pct * (total / 100.0)
+    parts = jnp.stack([dot, m.update_norm ** 2, m.effective_norm ** 2,
+                       lost, m.grad_norm ** 2])
+    dot, un2, en2, lost, gn2 = jax.lax.psum(parts, axis)
+    un = jnp.sqrt(un2)
+    return StepMetrics(edq=dot / jnp.maximum(un, 1e-30), update_norm=un,
+                       effective_norm=jnp.sqrt(en2),
+                       imprecision_pct=100.0 * lost / total,
+                       grad_norm=jnp.sqrt(gn2))
+
+
+def _zero_step_metrics() -> StepMetrics:
+    return StepMetrics(*(jnp.zeros((), jnp.float32),) * 5)
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
+                            axis: Axis = "data",
+                            microbatch: int = 0, remat: str = "none",
+                            grad_compression: str = "none",
+                            zero_shard: Optional[bool] = None,
+                            pipeline_axis: Optional[str] = None,
+                            donate: bool = False,
+                            jit: bool = True) -> Callable:
+    """Build the shard_map train step: (TrainState, batch) → (TrainState,
+    metrics), with state/batch sharded per ``state_pspecs``/``batch_pspecs``.
+
+    zero_shard (default: on iff the optimizer is bucketed and the dp axis
+    has >1 device): ZeRO-shard every flat bucket over ``axis``; requires
+    the layout's pad_multiple to divide (``sharding.bucket_pad_multiple``).
+    grad_compression: "none" | "bf16[_ef]" | "fp8[_ef]" — quantizes the
+    gradient collective at bucket granularity (bucketed) or per leaf (tree
+    layout); "_ef" keeps the error-feedback residual.
+    pipeline_axis: opt-in GPipe schedule for a uniform single-group decoder
+    stack (tree layout, pre-chunked batches, no compression).
+    """
+    bucketed = opt.policy.bucketing.enabled
+    n_dp = _axis_size(mesh, axis)
+    if zero_shard is None:
+        zero_shard = bucketed and n_dp > 1
+    dtype, use_ef = compression.parse_spec(grad_compression)
+
+    if zero_shard:
+        if not bucketed:
+            raise ValueError("zero_shard requires the bucketed layout "
+                             "(opt.policy.bucketing.enabled)")
+        if not isinstance(axis, str):
+            raise ValueError("zero_shard needs a single named dp axis")
+        if opt.policy.strategy is Strategy.SR:
+            raise ValueError(
+                "SR + ZeRO unsupported: the counter-based noise stream "
+                "indexes elements by bucket-global position, which a shard-"
+                "local step cannot see (ROADMAP open item)")
+        # every bucket length is a multiple of pad_multiple, so checking it
+        # checks every shard: shards must divide the dp axis, and for fp8
+        # each shard must be a whole number of scaling blocks or the
+        # reduce-scattered payload's per-block scales misalign silently
+        need = n_dp * (compression.BLOCK
+                       if dtype is not None and compression.is_fp8(dtype)
+                       else 1)
+        pad = opt.policy.bucketing.pad_multiple
+        if pad % need:
+            raise ValueError(
+                f"bucket pad_multiple {pad} must be a multiple of {need} "
+                f"for ZeRO over {n_dp} devices"
+                + (" with fp8 block scaling" if need > n_dp else "")
+                + " — build the BucketPolicy with "
+                "sharding.bucket_pad_multiple(mesh, block=compression.BLOCK)")
+    if pipeline_axis is not None:
+        if bucketed or zero_shard:
+            raise ValueError("pipeline mode requires the tree layout")
+        if dtype is not None:
+            raise ValueError("pipeline + gradient compression unsupported "
+                             "(ROADMAP open item)")
+        _check_pipelinable(model, mesh.shape[pipeline_axis])
+
+    accum = train_loop.make_accum_grads(model, microbatch=microbatch,
+                                        remat=remat)
+
+    def pmean32(x, ax):
+        return (jax.lax.psum(x.astype(jnp.float32), ax) / n_dp).astype(x.dtype)
+
+    # ---------------------------------------------------- per-device body --
+    def body(state: train_loop.TrainState, batch):
+        if pipeline_axis is not None:
+            return _pipeline_body(state, batch)
+        opt_state = state.opt_state
+        params = state.params
+        grad_err = state.grad_err
+        if bucketed and zero_shard:
+            full = bucketing.BucketedParams(
+                tuple(jax.lax.all_gather(d, axis, tiled=True)
+                      for d in params.data), params.layout)
+        else:
+            full = params
+        loss, lmetrics, grads = accum(full, batch)
+        loss = jax.lax.pmean(loss, axis)
+        lmetrics = {k: jax.lax.pmean(lmetrics[k], axis)
+                    for k in ("ce", "aux")}
+
+        if bucketed:
+            err_rows = tuple(e[0] for e in opt_state.grad_err) \
+                if use_ef else None
+            if dtype is not None:
+                reducer = compression.psum_scatter_compressed_buckets \
+                    if zero_shard else compression.pmean_compressed_buckets
+                gdata, new_rows = reducer(grads.data, err_rows, dtype,
+                                          axis, n_dp)
+                if use_ef:
+                    opt_state = dataclasses.replace(
+                        opt_state,
+                        grad_err=tuple(r[None] for r in new_rows))
+            elif zero_shard:
+                gdata = tuple(
+                    (jax.lax.psum_scatter(g.astype(jnp.float32), axis,
+                                          scatter_dimension=0, tiled=True)
+                     / n_dp).astype(g.dtype) for g in grads.data)
+            else:
+                gdata = tuple(pmean32(g, axis) for g in grads.data)
+            new_params, new_opt, om = opt.step_bucketed(gdata, params,
+                                                        opt_state)
+            if zero_shard and opt.compute_metrics:
+                om = _combine_shard_metrics(om, params.layout.total_size,
+                                            axis)
+        else:
+            if dtype is not None:
+                # residual leaves carry a per-device dim: strip this
+                # device's row for the shared leaf-wise reducer, restore it
+                # for the out specs
+                err_plain = jax.tree_util.tree_map(lambda e: e[0], grad_err) \
+                    if use_ef else None
+                grads, new_err = compression.pmean_compressed_tree(
+                    grads, err_plain, dtype, axis, n_dp)
+                if use_ef:
+                    grad_err = jax.tree_util.tree_map(lambda r: r[None],
+                                                      new_err)
+            else:
+                grads = jax.tree_util.tree_map(lambda g: pmean32(g, axis),
+                                               grads)
+            new_params, new_opt, om = opt.step(grads, params, opt_state)
+        return (train_loop.TrainState(new_params, new_opt, grad_err),
+                _metric_dict(loss, lmetrics, om))
+
+    # --------------------------------------------------- pipeline variant --
+    S = mesh.shape[pipeline_axis] if pipeline_axis is not None else 1
+
+    def _pipeline_body(state, batch):
+        params = state.params
+        cfg = model.cfg
+        group = cfg.decoder_program()[0]
+
+        def stage_body(stage_params, h):
+            out, _aux = tf.group_apply(stage_params, h, group, cfg,
+                                       remat=remat)
+            return out
+
+        # Body vs head grads are separated by differentiating two aliases
+        # of the same params: the body path (embedding lookup + stage
+        # schedule) produces stage-LOCAL contributions (nonzero only where
+        # this device computed — stage chunks, and the lookup on stage 0),
+        # while the head path (final norm + lm head, incl. the TIED
+        # embedding when cfg.tie_embeddings) is computed identically on
+        # every stage from the psum-broadcast outputs. A single combined
+        # grad cannot be fixed up post-hoc for tied embeddings (psum would
+        # S-fold the head contribution; pmean would lose (S−1)/S of the
+        # lookup's).
+        def loss_fn(p_body, p_head, chunks):
+            x = embed_lookup(p_body["embed"], chunks["tokens"])
+            out = pp.stage_schedule(stage_body,
+                                    p_body["decoder"]["groups"][0],
+                                    x, axis=pipeline_axis, n_stages=S)
+            logits = model._head(p_head, out)     # (n, mb, L, V) fp32
+            ce = model.token_ce(logits, chunks["labels"])
+            return ce, {"ce": ce, "aux": jnp.zeros((), ACC)}
+
+        (loss, lmetrics), (g_body, g_head) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, params, batch)
+
+        def fix_body(path, g):
+            if _in_groups(path):
+                return g                          # stage-local chunk
+            # embedding lookup: only stage 0 feeds activations in → psum
+            # recovers the total (all other body leaves are zero here)
+            return jax.lax.psum(g, pipeline_axis)
+
+        def fix_head(g):
+            # identical on every stage — pmean is a numerical no-op (S is
+            # a power of two) that tolerates any per-stage drift
+            return jax.lax.pmean(g, pipeline_axis)
+
+        grads = jax.tree_util.tree_map(
+            lambda a, b: (a.astype(jnp.float32)
+                          + b.astype(jnp.float32)).astype(a.dtype),
+            jax.tree_util.tree_map_with_path(fix_body, g_body),
+            jax.tree_util.tree_map(fix_head, g_head))
+        grads = jax.tree_util.tree_map(lambda g: pmean32(g, axis), grads)
+        loss = jax.lax.pmean(loss, axis)
+        lmetrics = {k: jax.lax.pmean(lmetrics[k], axis)
+                    for k in ("ce", "aux")}
+        new_params, new_opt, _ = opt.step(grads, params, state.opt_state)
+        return (train_loop.TrainState(new_params, new_opt, None),
+                _metric_dict(loss, lmetrics, _zero_step_metrics()))
+
+    # ------------------------------------------------------------ wrapper --
+    def step(state, batch):
+        sspecs = state_pspecs(state, axis=axis, zero_shard=zero_shard,
+                              pipeline_axis=pipeline_axis)
+        bspecs = batch_pspecs(batch, axis=axis)
+        mspecs = {k: P() for k in _METRIC_KEYS}
+        fn = shard_map(body, mesh=mesh, in_specs=(sspecs, bspecs),
+                       out_specs=(sspecs, mspecs), check_rep=False)
+        return fn(state, batch)
+
+    if jit:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+    return step
+
+
+def _check_pipelinable(model: Model, n_stages: int):
+    cfg = model.cfg
+    prog = cfg.decoder_program()
+    if cfg.is_encdec or cfg.family == "vlm":
+        raise ValueError("pipeline mode: decoder-only models only")
+    if len(prog) != 1:
+        raise ValueError(
+            f"pipeline mode needs a uniform single-group decoder stack, "
+            f"got {len(prog)} groups")
+    group = prog[0]
+    if any(s.kind in ("moe", "cross_attn") for s in group.period):
+        raise ValueError("pipeline mode: MoE/cross-attn groups unsupported "
+                         "(aux losses don't ride the stage schedule)")
+    if group.repeats % n_stages:
+        raise ValueError(
+            f"decoder depth {group.repeats} not divisible by "
+            f"{n_stages} pipeline stages")

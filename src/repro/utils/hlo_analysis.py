@@ -432,3 +432,75 @@ def analyze(text: str, entry: Optional[str] = None) -> Costs:
         m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
         entry = m.group(1) if m else next(iter(comps))
     return total(entry, False)
+
+
+# --------------------------------------------------------------------------
+# StableHLO collective inspection (pre-XLA-optimization IR)
+# --------------------------------------------------------------------------
+#
+# Collective *operand dtype* assertions must run on the LOWERED StableHLO,
+# not the compiled HLO: the CPU backend upcasts bf16/fp8 collectives to f32
+# at optimization time (a backend artifact — on TPU the wire payload stays
+# low-precision as staged). reduce/all_reduce ops carry a reducer region, so
+# the `: (tensor<...>) -> ...` type signature sits on the region-closing
+# `})` line rather than the op line.
+
+_STABLE_COLL_RE = re.compile(
+    r'"stablehlo\.(all_reduce|reduce_scatter|all_gather|'
+    r'collective_permute|collective_broadcast)"')
+_TENSOR_RE = re.compile(r"tensor<(?:(\d+(?:x\d+)*)x)?([a-zA-Z]\w*)>")
+_STABLE_INT_BYTES = {"i1": 1, "i4": 1, "i8": 1, "i16": 2, "i32": 4,
+                     "i64": 8, "ui8": 1, "ui16": 2, "ui32": 4, "ui64": 8}
+
+
+def stablehlo_collectives(text: str) -> list:
+    """Parse collectives out of StableHLO module text (``lowered.as_text()``).
+
+    Returns [{"kind", "dtype", "numel", "bytes"}], one entry per op, taken
+    from the op's operand side of the type signature."""
+    out = []
+    lines = text.splitlines()
+    for i, line in enumerate(lines):
+        m = _STABLE_COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sig = None
+        if "->" in line and "tensor<" in line.split(":")[-1]:
+            sig = line[line.rindex(":"):]
+        else:
+            for j in range(i + 1, min(i + 400, len(lines))):
+                lj = lines[j].lstrip()
+                if lj.startswith("})") and "tensor<" in lj:
+                    sig = lj[lj.index(":"):]
+                    break
+        if sig is None:
+            continue
+        operand_part = sig.split("->")[0]
+        tm = _TENSOR_RE.search(operand_part)
+        if not tm:
+            continue
+        dims, dt = tm.groups()
+        numel = 1
+        for d in (dims or "").split("x"):
+            if d:
+                numel *= int(d)
+        # stablehlo dtype spellings: f32, bf16, f8E4M3FN, and iN for ints
+        # (HLO spells those sN/uN — map them; skip-to-0 on anything truly
+        # unknown, matching shape_bytes' policy, rather than guessing)
+        key = dt.lower()
+        nbytes = numel * _DTYPE_BYTES.get(
+            key, _STABLE_INT_BYTES.get(key, 0))
+        out.append({"kind": kind, "dtype": dt, "numel": numel,
+                    "bytes": nbytes})
+    return out
+
+
+def collective_dtype_census(text: str) -> dict:
+    """{kind: {dtype: count}} over the StableHLO collectives."""
+    census: dict = {}
+    for c in stablehlo_collectives(text):
+        census.setdefault(c["kind"], {})
+        census[c["kind"]][c["dtype"]] = \
+            census[c["kind"]].get(c["dtype"], 0) + 1
+    return census

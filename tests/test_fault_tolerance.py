@@ -102,12 +102,49 @@ class TestSupervisor:
                             fault_hook=fault)
         final, step_i, _ = sup.run(state, step, batch_fn, n_steps=10)
         assert step_i == 10
-        assert sup.recoveries == [5]
+        # recoveries record the FAULTING step (forensics), not the
+        # checkpoint it rolled back to
+        assert sup.recoveries == [7]
+        assert sup.stragglers == []
         # must equal an uninterrupted run
         s = state
         for i in range(10):
             s, _ = step(s, batch_fn(i))
         _leaves_equal(s, final)
+
+    def test_straggler_keeps_completed_state(self):
+        """A late-but-successful step must NOT be rolled back: the supervisor
+        keeps the completed state, records the faulting step, and the run
+        equals an uninterrupted one bit-for-bit (no discarded work)."""
+        import time
+
+        state = jnp.zeros((4,), jnp.float32)
+        # warm the dispatch path: the first eager `s + batch` can cost tens
+        # of ms and would otherwise inflate the p99 deadline window
+        (state + jnp.float32(0)).block_until_ready()
+
+        def train_step(s, batch):
+            # deterministic fast steps; step 7 is a straggler, slow enough
+            # to clear the deadline even if a cold-start outlier lands in
+            # the p99 window (deadline ≤ ~0.1s·slack)
+            if int(batch) == 7:
+                time.sleep(1.0)
+            else:
+                time.sleep(0.002)
+            return s + batch, {"loss": 0.0}
+
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            sup = RunSupervisor(SupervisorConfig(
+                d, ckpt_every=5, min_step_time=1e-4, deadline_slack=5.0))
+            final, step_i, _ = sup.run(state, train_step,
+                                       lambda i: jnp.float32(i), n_steps=10)
+        assert step_i == 10
+        assert sup.recoveries == [7] and sup.stragglers == [7]
+        # straggler outliers must not poison the p99 deadline window
+        assert all(t < 0.5 for t in sup.step_times)
+        np.testing.assert_array_equal(np.asarray(final),
+                                      np.full((4,), sum(range(10)), np.float32))
 
 
 class TestElasticRestore:
