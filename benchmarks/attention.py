@@ -1,0 +1,182 @@
+"""Attention-path benchmark: flash (Pallas custom-VJP) vs masked vs banded.
+
+What is measured / validated:
+
+  * **structural O(L²) elimination** — the LOWERED StableHLO of a full
+    L=4096 train step (forward + backward + optimizer) with flash dispatch
+    contains NO score-class buffer (no tensor with two dims ≥ L), asserted
+    via ``utils.hlo_analysis.quadratic_buffers``. The masked baseline's
+    step IS flagged — proving the assert has teeth. This is the claim that
+    matters for the "as fast as the hardware allows" goal: at L=8k the
+    (B, h, L, L) fp32 score tensor dwarfs the model itself and caps the
+    trainable sequence length regardless of wall-clock.
+  * **gradient correctness** — ``jax.grad`` of the flash-path loss matches
+    the masked baseline's on an fp32 model (the kernel-level VJP sweep
+    lives in tests/test_flash_vjp.py; this is the end-to-end train-path
+    check the JSON records).
+  * **wall-clock** — value-and-grad step time for masked / banded / flash
+    at a windowed-local config. Interpret-mode Pallas on CPU carries
+    emulation overhead, so CPU wall-clock is reported informationally
+    (the structural claims are the validated ones — same policy as
+    BENCH_train_step.json's dp-scaling numbers).
+
+  PYTHONPATH=src python -m benchmarks.attention [--quick]
+
+Emits ``BENCH_attention.json``; wired into benchmarks.run as ``attention``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.collage import CollageAdamW
+from repro.core.precision import PrecisionPolicy, Strategy
+from repro.data.synthetic import make_batch_fn
+from repro.models.model import build_model
+from repro.train import train_loop
+from repro.utils import hlo_analysis
+
+HLO_L = 4096          # acceptance claim runs at L >= 4k
+TIMED_L = 512         # wall-clock at a CPU-tractable length
+
+
+def _variant(cfg, impl: str, flash: bool):
+    cfg = dataclasses.replace(cfg, attention_impl=impl,
+                              flash_min_len=256 if flash else 0,
+                              flash_block=128)
+    return build_model(cfg)
+
+
+def _lowered_step_text(model, L: int, B: int = 1) -> str:
+    opt = CollageAdamW(1e-3, b2=0.95, policy=PrecisionPolicy(
+        strategy=Strategy.C_COLLAGE_PLUS))
+    step = train_loop.make_train_step(model, opt)
+    batch_fn = make_batch_fn(model.cfg, ShapeConfig("hlo", L, B, "train"))
+    state = jax.eval_shape(
+        lambda: train_loop.init_state(model, opt, jax.random.PRNGKey(0)))
+    return jax.jit(step).lower(state, jax.eval_shape(lambda: batch_fn(0))
+                               ).as_text()
+
+
+def _timed_step(model, L: int, B: int, iters: int):
+    opt = CollageAdamW(1e-3, b2=0.95, policy=PrecisionPolicy(
+        strategy=Strategy.C_COLLAGE_PLUS))
+    step = jax.jit(train_loop.make_train_step(model, opt))
+    batch_fn = make_batch_fn(model.cfg, ShapeConfig("t", L, B, "train"))
+    state = train_loop.init_state(model, opt, jax.random.PRNGKey(0))
+    state, m = step(state, batch_fn(0))                    # compile+warm
+    jax.block_until_ready(m["loss"])
+    times = []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        state, m = step(state, batch_fn(i + 1))
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _grad_err(cfg, L: int = 256, B: int = 2) -> float:
+    """Max relative grad error flash vs masked on an fp32 model."""
+    cfg32 = dataclasses.replace(cfg, dtype="float32")
+    masked = _variant(cfg32, "masked", False)
+    flash = _variant(cfg32, "masked", True)
+    batch = make_batch_fn(cfg32, ShapeConfig("g", L, B, "train"))(0)
+    params = masked.init(jax.random.PRNGKey(0))
+    g0 = jax.grad(lambda p: masked.loss(p, batch)[0])(params)
+    g1 = jax.grad(lambda p: flash.loss(p, batch)[0])(params)
+    err = 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(g0),
+                    jax.tree_util.tree_leaves(g1)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(float(np.abs(a).max()), 1e-6)
+        err = max(err, float(np.abs(a - b).max()) / scale)
+    return err
+
+
+def _bench(quick: bool, out_path: str) -> dict:
+    cfg = get_config("gpt-tiny", smoke=True)     # d_model/vocab ≪ L: any
+    #                                              two-L-dim tensor IS a score
+    local = dataclasses.replace(cfg, local_global_period=2, window_size=128)
+
+    # --- structural claim: lowered L=4096 train step ---
+    flash_txt = _lowered_step_text(_variant(cfg, "masked", True), HLO_L)
+    masked_txt = _lowered_step_text(_variant(cfg, "masked", False), HLO_L)
+    flash_quad = hlo_analysis.quadratic_buffers(flash_txt, HLO_L)
+    masked_quad = hlo_analysis.quadratic_buffers(masked_txt, HLO_L)
+
+    # --- end-to-end gradient correctness (fp32 model) ---
+    gerr = _grad_err(cfg)
+
+    # --- wall-clock (informational on CPU: interpret-mode Pallas) ---
+    iters = 3 if quick else 7
+    B = 2
+    timing = {}
+    for name, model in (
+            ("masked", _variant(local, "masked", False)),
+            ("banded", _variant(local, "banded", False)),
+            ("flash", _variant(local, "masked", True))):
+        timing[name] = _timed_step(model, TIMED_L, B, iters)
+
+    results = {
+        "hlo_seq_len": HLO_L,
+        "flash_quadratic_buffers": flash_quad[:8],
+        "masked_quadratic_buffers": masked_quad[:8],
+        "flash_vs_masked_max_rel_grad_err": gerr,
+        "timed_seq_len": TIMED_L,
+        "train_step_s": timing,
+        "note": ("CPU wall-clock runs the Pallas kernels in interpret mode "
+                 "(emulation overhead); structural claims are the "
+                 "validated ones, re-time on real TPU hosts"),
+    }
+    results["ok"] = {
+        # the acceptance-criteria claim: no (B, h, L, L)-class buffer in
+        # the lowered flash train step at L >= 4k …
+        "flash_step_has_no_quadratic_buffer": not flash_quad,
+        # … and the detector actually fires on the masked baseline
+        "masked_step_has_quadratic_buffer": bool(masked_quad),
+        "flash_grads_match_masked_fp32": gerr < 1e-3,
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def attention_bench(quick: bool = False,
+                    out_path: str = "BENCH_attention.json"):
+    """Returns (csv_rows, ok_dict) for benchmarks.run."""
+    results = _bench(quick, out_path)
+    rows = []
+    for name, s in results["train_step_s"].items():
+        rows.append(f"attention/train_step_{name},{s * 1e6:.1f},"
+                    f"L={results['timed_seq_len']}")
+    rows.append(f"attention/flash_vs_masked_grad_err,0.0,"
+                f"max_rel={results['flash_vs_masked_max_rel_grad_err']:.2e}")
+    rows.append(f"attention/quadratic_buffers,0.0,"
+                f"flash={len(results['flash_quadratic_buffers'])} "
+                f"masked={len(results['masked_quadratic_buffers'])}")
+    return rows, dict(results["ok"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_attention.json")
+    args = ap.parse_args(argv)
+    results = _bench(args.quick, args.out)
+    for k, v in results["ok"].items():
+        print(f"#  {'PASS' if v else 'FAIL'} {k}")
+    return 0 if all(results["ok"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

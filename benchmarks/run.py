@@ -11,13 +11,14 @@ import argparse
 import sys
 import time
 
-from benchmarks import optimizer_step, roofline, train_step, \
+from benchmarks import attention, optimizer_step, roofline, train_step, \
     table_benchmarks as tb
 
 
 BENCHES = [
     ("opt_step", optimizer_step.optimizer_step_bench),
     ("train_step", train_step.train_step_bench),
+    ("attention", attention.attention_bench),
     ("table1", tb.table1_expansions),
     ("table2", tb.table2_memory),
     ("table3", tb.table3_pretrain),

@@ -51,6 +51,12 @@ class ModelConfig:
     local_global_period: int = 0   # e.g. 6 → 5 local + 1 global
     window_size: int = 1024
     attention_impl: str = "masked"  # "masked" (baseline) | "banded" (optimized)
+    # --- flash-attention train/prefill path (Pallas custom-VJP kernels) ---
+    # causal self-attention sublayers (global AND banded-local) dispatch to
+    # kernels.flash_attention.flash_mha when L >= flash_min_len (0 = off);
+    # the masked/banded jnp paths stay as the short-sequence + oracle paths
+    flash_min_len: int = 0
+    flash_block: int = 128         # q/k block size of the flash kernels
     # --- hybrid (jamba) ---
     attn_every: int = 0       # e.g. 8 → attention at period position 7 (1:7)
     moe_every: int = 0        # e.g. 2 → MoE FFN on odd positions

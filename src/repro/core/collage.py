@@ -149,13 +149,18 @@ class CollageAdamW:
                             sr_seed=self.sr_seed)
 
     def step_bucketed(self, grads, bparams: bucketing.BucketedParams,
-                      bstate: bucketing.BucketedOptState):
+                      bstate: bucketing.BucketedOptState, *,
+                      metrics_partials: bool = False):
         """One step over buckets: one fused launch per bucket, no per-step
         flatten/concat (tests assert the jaxpr is concat-free). ``grads`` is
         a BucketedParams (``jax.grad`` w.r.t. bucketed params) or a tuple of
-        flat bucket arrays."""
+        flat bucket arrays. ``metrics_partials=True`` returns the raw
+        metric-partial 5-tuple in place of StepMetrics (see
+        ops.bucketed_step) — how the ZeRO engine makes its cross-shard
+        metrics exact."""
         from repro.kernels.collage_update import ops as kops
-        return kops.bucketed_step(self, grads, bparams, bstate)
+        return kops.bucketed_step(self, grads, bparams, bstate,
+                                  metrics_partials=metrics_partials)
 
     # ------------------------------------------------------------------ step
     def step(self, grads: Any, params: Any, state: CollageOptState

@@ -69,18 +69,26 @@ def _update_one_bucket(opt, state_dict, g, lr, bc1, bc2, seed,
                                             seed, tiled_metrics=False, **kw)
 
 
-def _finalize_metrics(partials_list, total: int) -> StepMetrics:
-    """Combine per-bucket (5,) partials into StepMetrics (Paper Def. 3.3).
+def sum_partials(partials_list) -> tuple:
+    """Σ of per-bucket metric partials — the RAW pre-finalization
+    quantities (⟨Δθ,Δθ̂⟩, ‖Δθ‖², ‖Δθ̂‖², #lost, ‖g‖²) as a 5-tuple of f32
+    scalars. They are plain sums over elements, so partials from ZeRO
+    shards / more buckets combine by addition (one pytree ``psum`` in the
+    sharded engine) before finalizing ONCE. Kept as a scalar tuple — a
+    stacked (5,) array would put a ``concatenate`` into the steady-state
+    optimizer jaxpr, which must stay concat-free (DESIGN.md §5)."""
+    tot = (jnp.float32(0.0),) * 5
+    for p in partials_list:   # kernel/oracle emit per-bucket 5-tuples
+        tot = tuple(t + q for t, q in zip(tot, p))
+    return tot
+
+
+def finalize_metrics(partials, total: int) -> StepMetrics:
+    """Raw partials (5-tuple or (5,) array) → StepMetrics (Paper Def. 3.3).
 
     ``total`` is the UNPADDED parameter count — padding lanes contribute
     exact zeros to every partial, so only the denominator needs care."""
-    dot = un2 = en2 = lost = gn2 = jnp.float32(0.0)
-    for p in partials_list:
-        dot = dot + p[0]
-        un2 = un2 + p[1]
-        en2 = en2 + p[2]
-        lost = lost + p[3]
-        gn2 = gn2 + p[4]
+    dot, un2, en2, lost, gn2 = partials
     un = jnp.sqrt(un2)
     return StepMetrics(
         edq=dot / jnp.maximum(un, 1e-30),
@@ -88,6 +96,10 @@ def _finalize_metrics(partials_list, total: int) -> StepMetrics:
         effective_norm=jnp.sqrt(en2),
         imprecision_pct=100.0 * lost / total,
         grad_norm=jnp.sqrt(gn2))
+
+
+def _finalize_metrics(partials_list, total: int) -> StepMetrics:
+    return finalize_metrics(sum_partials(partials_list), total)
 
 
 def _zero_metrics() -> StepMetrics:
@@ -107,11 +119,17 @@ def _scalars(opt, t):
 # --------------------------------------------------------------------------
 
 def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
-                  bstate: bucketing.BucketedOptState):
+                  bstate: bucketing.BucketedOptState, *,
+                  metrics_partials: bool = False):
     """One optimizer step over persistent buckets.
 
     ``grads``: BucketedParams (from ``jax.grad`` w.r.t. a BucketedParams) or
-    a bare tuple of flat bucket arrays matching ``bparams.layout``."""
+    a bare tuple of flat bucket arrays matching ``bparams.layout``.
+    ``metrics_partials``: return the RAW summed metric partials (5-tuple
+    of f32 scalars) instead of finalized StepMetrics — a cross-shard
+    caller (train/sharded.py ZeRO) psums them and calls
+    :func:`finalize_metrics` once, which is exact by construction (no
+    un-finalize inverse to keep in sync)."""
     s = opt.policy.strategy
     layout = bparams.layout
     gdata = grads.data if isinstance(grads, bucketing.BucketedParams) \
@@ -137,8 +155,12 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
         if part is not None:
             partials.append(part)
 
-    metrics = _finalize_metrics(partials, layout.total_size) \
-        if opt.compute_metrics else _zero_metrics()
+    if metrics_partials:
+        metrics = sum_partials(partials) if opt.compute_metrics \
+            else (jnp.float32(0.0),) * 5
+    else:
+        metrics = _finalize_metrics(partials, layout.total_size) \
+            if opt.compute_metrics else _zero_metrics()
     new_state = bucketing.BucketedOptState(
         step=t, m=tuple(new["m"]), vhi=tuple(new["vhi"]),
         vlo=tuple(new["vlo"]) if "vlo" in fields else bstate.vlo,

@@ -1,46 +1,90 @@
-"""FlashAttention forward Pallas-TPU kernel (causal + sliding-window, GQA).
+"""FlashAttention Pallas-TPU kernels: forward + custom-VJP backward
+(causal + sliding-window, GQA) — the training-path subsystem that removes
+the O(L²) score buffer from BOTH passes (DESIGN.md §7).
 
-VMEM tiling: grid = (batch, q_heads, Lq/BLK_Q); each program streams KV
-blocks of BLK_K with the online-softmax recurrence entirely in VMEM —
-scores never touch HBM (the O(L²) buffer the masked baseline materializes).
-GQA is FREE here: the kv BlockSpec index-maps head h → h // group, so KV
-heads are never replicated in memory.
+Forward (``_fwd_kernel``): grid = (batch, q_heads, Lq/BLK_Q); each program
+streams KV blocks of BLK_K with the online-softmax recurrence entirely in
+VMEM — scores never touch HBM. Besides the output O it emits the row
+log-sum-exp LSE = m + log(l), the only softmax statistic the backward pass
+needs (saving the (L, L) probability matrix is exactly what flash forbids).
 
-Used by the serving path at ≥8k sequence; oracle = models.attention
-reference (full softmax), swept over shapes/dtypes in tests.
+Backward: two kernels, both recomputing scores in VMEM from (Q, K, LSE):
+
+  * ``_dq_kernel`` — q-block grid (batch, q_heads, Lq/BLK_Q): for each
+    query block, stream key blocks, p = exp(s − lse), ds = p·(dO·Vᵀ − D),
+    accumulate dQ += ds·K.
+  * ``_dkv_kernel`` — k-block grid (batch, kv_heads, Lk/BLK_K, group):
+    for each key block, stream query blocks, accumulate dV += pᵀ·dO and
+    dK += dsᵀ·Q. The innermost ``group`` grid dim revisits the same dK/dV
+    output block for every query head of the GQA group (grouped index-maps
+    — KV heads are never replicated in memory in either pass), summing the
+    per-q-head contributions in place.
+
+``D = rowsum(dO ∘ O)`` (the standard recomputation trick: the dP→dS
+softmax Jacobian term ⟨dPᵢ, Pᵢ⟩ equals ⟨dOᵢ, Oᵢ⟩) is computed once outside
+the kernels — an O(L·dh) elementwise pass, not a materialized score.
+
+``flash_mha`` wraps forward+backward in a ``jax.custom_vjp``: causal,
+sliding-window and GQA, arbitrary (odd) L via zero-padding to the block
+multiple with an in-kernel valid-length mask. ``interpret=None`` resolves
+to interpret-mode off TPU, so the same entry point runs tier-1 CI on CPU
+and compiles to Mosaic on device. Oracle = ``ref.attention_ref`` (full
+masked softmax), forward AND ``jax.grad`` swept in tests/test_flash_vjp.py.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG_INF = -1e30
+F32 = jnp.float32
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
-                  seq_len: int, causal: bool, window: int, scale: float):
+def _band_lo_block(qi, blk_q: int, blk_k: int, window: int):
+    """First key-block index inside the sliding-window band for query block
+    ``qi``. The lowest position any query in the block attends is
+    qi·blk_q − window + 1 (kpos ≤ qpos − window is masked), so the correct
+    floor-divide at the band edge is on (… + 1) — dividing qi·blk_q − window
+    visits one extra fully-masked block per program."""
+    return jnp.maximum(qi * blk_q - window + 1, 0) // blk_k
+
+
+def _mask(s_shape, q0, k0, *, causal: bool, window: int, valid_len: int):
+    """Invalid-pair mask for a (blk_q, blk_k) tile at offsets (q0, k0)."""
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
+    bad = jnp.zeros(s_shape, bool)
+    if causal:
+        bad |= kpos > qpos
+    if window:
+        bad |= kpos <= qpos - window
+    if valid_len:
+        bad |= kpos >= valid_len
+    return bad
+
+
+# --------------------------------------------------------------- forward --
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, blk_q: int,
+                blk_k: int, seq_len: int, causal: bool, window: int,
+                scale: float, valid_len: int):
     qi = pl.program_id(2)
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (blk_q, dh)
+    q = q_ref[0, 0].astype(F32)                          # (blk_q, dh)
     nk = seq_len // blk_k
-    m = jnp.full((blk_q,), NEG_INF, jnp.float32)
-    l = jnp.zeros((blk_q,), jnp.float32)
-    acc = jnp.zeros((blk_q, q.shape[-1]), jnp.float32)
+    m = jnp.full((blk_q,), NEG_INF, F32)
+    l = jnp.zeros((blk_q,), F32)
+    acc = jnp.zeros((blk_q, q.shape[-1]), F32)
 
     def body(kj, carry):
         m, l, acc = carry
-        k = k_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(jnp.float32)
-        v = v_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(jnp.float32)
-        s = q @ k.T                                       # (blk_q, blk_k)
-        qpos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        kpos = kj * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        bad = jnp.zeros(s.shape, bool)
-        if causal:
-            bad |= kpos > qpos
-        if window:
-            bad |= kpos <= qpos - window
+        k = k_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(F32)
+        v = v_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(F32)
+        s = (q @ k.T) * scale                             # (blk_q, blk_k)
+        bad = _mask(s.shape, qi * blk_q, kj * blk_k, causal=causal,
+                    window=window, valid_len=valid_len)
         s = jnp.where(bad, NEG_INF, s)
         m_new = jnp.maximum(m, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None])
@@ -50,32 +94,27 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
         return m_new, l_new, acc_new
 
     # causal: skip key blocks strictly after this query block
-    hi = (qi + 1) * blk_q if causal else seq_len
-    n_iter = (hi + blk_k - 1) // blk_k if causal else nk
-    lo = 0
-    if window:  # skip key blocks entirely below the band
-        lo = jnp.maximum(0, (qi * blk_q - window) // blk_k)
-        lo = int(lo) if isinstance(lo, int) else lo
+    n_iter = pl.cdiv((qi + 1) * blk_q, blk_k) if causal else nk
+    lo = _band_lo_block(qi, blk_q, blk_k, window) if window else 0
     m, l, acc = jax.lax.fori_loop(lo, n_iter, body, (m, l, acc))
     o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    # fully-masked (padded) rows: m never left NEG_INF (l is NOT a valid
+    # detector — every masked tile contributes p = exp(NEG_INF − NEG_INF)
+    # = 1 to it). Park their LSE at +big so the backward recomputation
+    # exp(NEG_INF − lse) is exactly 0 instead of exp(0) = 1.
+    lse_ref[0, 0] = jnp.where(m > NEG_INF * 0.5,
+                              m + jnp.log(jnp.maximum(l, 1e-30)),
+                              jnp.float32(-NEG_INF))
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "blk_q", "blk_k", "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
-                    interpret=True):
-    """q: (B, H, L, dh); k/v: (B, Hkv, L, dh) with H % Hkv == 0.
-    Returns (B, H, L, dh) in q.dtype. L % blk == 0 (wrapper pads)."""
+def _fwd_call(q, k, v, *, causal, window, blk_q, blk_k, valid_len,
+              interpret):
     B, H, L, dh = q.shape
-    Hkv = k.shape[1]
-    group = H // Hkv
-    blk_q = min(blk_q, L)
-    blk_k = min(blk_k, L)
-    assert L % blk_q == 0 and L % blk_k == 0
+    group = H // k.shape[1]
     scale = dh ** -0.5
-    kernel = functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+    kernel = functools.partial(_fwd_kernel, blk_q=blk_q, blk_k=blk_k,
                                seq_len=L, causal=causal, window=window,
-                               scale=scale)
+                               scale=scale, valid_len=valid_len)
     return pl.pallas_call(
         kernel,
         grid=(B, H, L // blk_q),
@@ -85,7 +124,227 @@ def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
             pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
             pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct((B, H, L), F32)],
         interpret=interpret,
     )(q, k, v)
+
+
+# -------------------------------------------------------------- backward --
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               blk_q: int, blk_k: int, seq_len: int, causal: bool,
+               window: int, scale: float, valid_len: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(F32)                          # (blk_q, dh)
+    do = do_ref[0, 0].astype(F32)
+    lse = lse_ref[0, 0]                                  # (blk_q,)
+    delta = delta_ref[0, 0]
+
+    def body(kj, acc):
+        k = k_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(F32)
+        v = v_ref[0, 0, pl.ds(kj * blk_k, blk_k), :].astype(F32)
+        s = (q @ k.T) * scale
+        bad = _mask(s.shape, qi * blk_q, kj * blk_k, causal=causal,
+                    window=window, valid_len=valid_len)
+        s = jnp.where(bad, NEG_INF, s)
+        p = jnp.exp(s - lse[:, None])                    # masked → exactly 0
+        dp = do @ v.T                                    # (blk_q, blk_k)
+        ds = p * (dp - delta[:, None])
+        return acc + ds @ k
+
+    n_iter = pl.cdiv((qi + 1) * blk_q, blk_k) if causal \
+        else seq_len // blk_k
+    lo = _band_lo_block(qi, blk_q, blk_k, window) if window else 0
+    acc = jax.lax.fori_loop(lo, n_iter, body,
+                            jnp.zeros((blk_q, q.shape[-1]), F32))
+    dq_ref[0, 0] = acc * scale
+
+
+def _dkv_kernel(q_ref, do_ref, lse_ref, delta_ref, k_ref, v_ref,
+                dk_ref, dv_ref, *, blk_q: int, blk_k: int, seq_len: int,
+                causal: bool, window: int, scale: float, valid_len: int):
+    kj = pl.program_id(2)
+    g = pl.program_id(3)                                 # GQA group member
+    k = k_ref[0, 0].astype(F32)                          # (blk_k, dh)
+    v = v_ref[0, 0].astype(F32)
+    dh = k.shape[-1]
+    nq = seq_len // blk_q
+
+    def body(qi, carry):
+        dk, dv = carry
+        q = q_ref[0, 0, pl.ds(qi * blk_q, blk_q), :].astype(F32)
+        do = do_ref[0, 0, pl.ds(qi * blk_q, blk_q), :].astype(F32)
+        lse = lse_ref[0, 0, pl.ds(qi * blk_q, blk_q)]
+        delta = delta_ref[0, 0, pl.ds(qi * blk_q, blk_q)]
+        s = (q @ k.T) * scale                            # (blk_q, blk_k)
+        bad = _mask(s.shape, qi * blk_q, kj * blk_k, causal=causal,
+                    window=window, valid_len=valid_len)
+        s = jnp.where(bad, NEG_INF, s)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        dk = dk + ds.T @ q
+        return dk, dv
+
+    # causal: no query before this key block attends into it; window: no
+    # query past the band's upper edge does either
+    lo = (kj * blk_k) // blk_q if causal else 0
+    hi = jnp.minimum(nq, ((kj + 1) * blk_k + window - 2) // blk_q + 1) \
+        if window else nq
+    dk, dv = jax.lax.fori_loop(
+        lo, hi, body, (jnp.zeros((blk_k, dh), F32),
+                       jnp.zeros((blk_k, dh), F32)))
+    dk = dk * scale
+
+    # the ``group`` grid dim revisits this output block once per q head of
+    # the GQA group — first visit overwrites, later visits accumulate
+    @pl.when(g == 0)
+    def _():
+        dk_ref[0, 0] = dk
+        dv_ref[0, 0] = dv
+
+    @pl.when(g > 0)
+    def _():
+        dk_ref[0, 0] += dk
+        dv_ref[0, 0] += dv
+
+
+def _bwd_call(q, k, v, o, lse, do, *, causal, window, blk_q, blk_k,
+              valid_len, interpret):
+    B, H, L, dh = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    scale = dh ** -0.5
+    # D-trick: one O(L·dh) elementwise pass, fused by XLA — never a score
+    delta = (do.astype(F32) * o.astype(F32)).sum(-1)     # (B, H, L)
+    kw = dict(blk_q=blk_q, blk_k=blk_k, seq_len=L, causal=causal,
+              window=window, scale=scale, valid_len=valid_len)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **kw),
+        grid=(B, H, L // blk_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, L, dh), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i: (b, h, i)),
+            pl.BlockSpec((1, 1, blk_q), lambda b, h, i: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, F32),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **kw),
+        grid=(B, Hkv, L // blk_k, group),
+        in_specs=[
+            # grouped index-maps: q head = kv head · group + g
+            pl.BlockSpec((1, 1, L, dh),
+                         lambda b, hk, j, g: (b, hk * group + g, 0, 0)),
+            pl.BlockSpec((1, 1, L, dh),
+                         lambda b, hk, j, g: (b, hk * group + g, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, hk, j, g: (b, hk * group + g, 0)),
+            pl.BlockSpec((1, 1, L), lambda b, hk, j, g: (b, hk * group + g, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b, hk, j, g: (b, hk, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b, hk, j, g: (b, hk, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b, hk, j, g: (b, hk, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, dh), lambda b, hk, j, g: (b, hk, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, F32),
+                   jax.ShapeDtypeStruct(v.shape, F32)],
+        interpret=interpret,
+    )(q, do, lse, delta, k, v)
+    return dq, dk, dv
+
+
+# ----------------------------------------------------------- custom VJP ---
+def _pad_len(L: int, blk_q: int, blk_k: int) -> int:
+    m = math.lcm(blk_q, blk_k)
+    return -(-L // m) * m
+
+
+def _pad_seq(x, Lp: int):
+    L = x.shape[2]
+    if L == Lp:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, Lp - L), (0, 0)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_mha(q, k, v, causal, window, blk_q, blk_k, interpret):
+    o, _ = _mha_fwd(q, k, v, causal, window, blk_q, blk_k, interpret)
+    return o
+
+
+def _mha_fwd(q, k, v, causal, window, blk_q, blk_k, interpret):
+    L = q.shape[2]
+    Lp = _pad_len(L, blk_q, blk_k)
+    valid = L if Lp != L else 0          # 0 = no padding → no extra mask
+    o, lse = _fwd_call(_pad_seq(q, Lp), _pad_seq(k, Lp), _pad_seq(v, Lp),
+                       causal=causal, window=window, blk_q=blk_q,
+                       blk_k=blk_k, valid_len=valid, interpret=interpret)
+    o = o[:, :, :L]
+    return o, (q, k, v, o, lse)
+
+
+def _mha_bwd(causal, window, blk_q, blk_k, interpret, res, do):
+    q, k, v, o, lse = res
+    L = q.shape[2]
+    Lp = _pad_len(L, blk_q, blk_k)
+    valid = L if Lp != L else 0
+    dq, dk, dv = _bwd_call(
+        _pad_seq(q, Lp), _pad_seq(k, Lp), _pad_seq(v, Lp),
+        _pad_seq(o, Lp), lse, _pad_seq(do, Lp),
+        causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        valid_len=valid, interpret=interpret)
+    return (dq[:, :, :L].astype(q.dtype), dk[:, :, :L].astype(k.dtype),
+            dv[:, :, :L].astype(v.dtype))
+
+
+_flash_mha.defvjp(_mha_fwd, _mha_bwd)
+
+
+def default_interpret() -> bool:
+    """Interpret-mode everywhere but real TPU — the same entry point runs
+    tier-1 CI on CPU and compiles to Mosaic on device."""
+    return jax.default_backend() != "tpu"
+
+
+def flash_mha(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
+              interpret=None):
+    """Differentiable flash attention (the training/prefill entry point).
+
+    q: (B, H, L, dh); k/v: (B, Hkv, L, dh) with H % Hkv == 0 (GQA — KV
+    heads are never replicated, in either pass). Returns (B, H, L, dh) in
+    q.dtype. Any L: inputs are zero-padded to the block multiple and the
+    kernels mask positions ≥ L. ``window`` > 0 keeps only the causal band
+    kpos ∈ (qpos − window, qpos]. Both forward and backward stream KV/Q
+    blocks through VMEM — no O(L²) intermediate in the lowered program
+    (asserted by benchmarks/attention.py on the L=4096 train step)."""
+    B, H, L, dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    assert k.shape == v.shape == (B, Hkv, L, dh), (q.shape, k.shape, v.shape)
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_mha(q, k, v, bool(causal), int(window), int(blk_q),
+                      int(blk_k), bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
+                    interpret=True):
+    """Forward-only convenience wrapper (serving path ≥8k). Same kernel as
+    ``flash_mha`` — kept as a jitted entry point for direct callers."""
+    return flash_mha(q, k, v, causal=causal, window=window, blk_q=blk_q,
+                     blk_k=blk_k, interpret=interpret)

@@ -63,6 +63,8 @@ def cell_config(arch: str, shape_name: str, overrides: dict | None = None):
     for k, v in (overrides or {}).items():
         if k in ("attn",):
             cfg = dataclasses.replace(cfg, attention_impl=v)
+        elif k == "flashmin":   # Pallas flash train/prefill dispatch
+            cfg = dataclasses.replace(cfg, flash_min_len=int(v))
         elif k == "ssmchunk":
             cfg = dataclasses.replace(cfg, ssm_chunk=int(v))
         elif k == "rwkvchunk":

@@ -194,10 +194,17 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--flash-min-len", type=int, default=None,
+                    help="prefill dispatches causal self-attention to the "
+                         "Pallas flash kernels when prompt_len >= this "
+                         "(0 = off, unset = config default) — long-prompt "
+                         "prefill without the O(L^2) score buffer")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.flash_min_len is not None:
+        cfg = dataclasses.replace(cfg, flash_min_len=args.flash_min_len)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     corpus = SyntheticCorpus(cfg.vocab_size, args.prompt_len,

@@ -65,11 +65,13 @@ def build(args):
             model, opt, mesh, axis="data", microbatch=args.microbatch,
             remat=args.remat, grad_compression=args.grad_compression,
             zero_shard=True if args.zero else None,
-            pipeline_axis=pipeline_axis)
+            pipeline_axis=pipeline_axis,
+            flash_min_len=args.flash_min_len)
     else:
         step_fn = jax.jit(train_loop.make_train_step(
             model, opt, microbatch=args.microbatch, remat=args.remat,
-            grad_compression=args.grad_compression))
+            grad_compression=args.grad_compression,
+            flash_min_len=args.flash_min_len))
     batch_fn = make_batch_fn(cfg, shape, seed=args.seed)
     return cfg, model, opt, step_fn, batch_fn, mesh, pipeline_axis
 
@@ -103,6 +105,12 @@ def main(argv=None):
                          "rows per microbatch)")
     ap.add_argument("--sr-seed", type=int, default=0,
                     help="stochastic-rounding noise seed (--precision SR)")
+    ap.add_argument("--flash-min-len", type=int, default=None,
+                    help="dispatch causal self-attention to the Pallas "
+                         "flash custom-VJP kernels when seq_len >= this "
+                         "(0 = masked/banded jnp paths, unset = config "
+                         "default; the flash train step has no O(L^2) "
+                         "score buffer in either pass)")
     ap.add_argument("--no-metrics", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)

@@ -10,12 +10,19 @@ Two local-attention implementations (gemma3 5:1 pattern):
     own + previous key block only, O(L·W) FLOPs. This is the beyond-paper
     optimization used in the §Perf hillclimb; both paths are allclose-tested
     against each other.
+
+Above ``cfg.flash_min_len`` every causal self-attention sublayer (global,
+windowed-local, train/prefill alike) dispatches to the Pallas custom-VJP
+flash kernels (``kernel_flash_attention``, DESIGN.md §7) — no O(L²) score
+buffer in forward OR backward. The masked paths above stay as the
+short-sequence implementation and the test oracle.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention import flash_attention as kflash
 from repro.models.layers import ACC, dense_init, matmul, rms_norm, rope_apply, rope_freqs
 
 NEG_INF = -1e30
@@ -125,6 +132,32 @@ def banded_attention(p, x, cfg, *, window, positions=None):
                      preferred_element_type=ACC).astype(x.dtype)
     out = out.reshape(B, L, h * dh)
     return matmul(out, p["wo"])
+
+
+def use_flash(cfg, L: int) -> bool:
+    """Dispatch predicate for the Pallas flash path: opt-in via
+    ``cfg.flash_min_len`` and only worth the kernel launch above it."""
+    return cfg.flash_min_len > 0 and L >= cfg.flash_min_len
+
+
+def kernel_flash_attention(p, x, cfg, *, causal=True, window=0,
+                           positions=None):
+    """Pallas custom-VJP flash attention (kernels.flash_attention.flash_mha):
+    the train/prefill hot path above ``cfg.flash_min_len``. Causal
+    self-attention only (masks are row-index based, which matches every
+    non-decode path); handles sliding windows and GQA in-kernel, arbitrary
+    L via block padding. Interpret-mode off-TPU so tier-1 CI runs it."""
+    B, L, _ = x.shape
+    if positions is None and cfg.rope_theta > 0:
+        positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    q, k, v = _qkv(p, x, x, cfg, positions, positions)
+    h, dh = cfg.n_heads, cfg.head_dim_
+    o = kflash.flash_mha(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        blk_q=cfg.flash_block, blk_k=cfg.flash_block)
+    out = o.transpose(0, 2, 1, 3).reshape(B, L, h * dh)
+    return matmul(out.astype(x.dtype), p["wo"])
 
 
 def flash_attention(p, x, cfg, *, causal=True, window=0, positions=None,

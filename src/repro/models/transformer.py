@@ -86,7 +86,14 @@ def sub_apply(p, x, sub: Sub, cfg: ModelConfig, memory=None, positions=None):
     aux = jnp.zeros((), ACC)
     if sub.kind == "attn":
         impl = cfg.attention_impl
-        if sub.window and impl in ("banded", "flash") and sub.causal:
+        if sub.causal and attn.use_flash(cfg, x.shape[1]):
+            # flash train/prefill path (DESIGN.md §7): Pallas custom-VJP
+            # kernels for global AND banded-local layers above the length
+            # threshold — no O(L²) score buffer in either pass
+            out = _residual(p, x, cfg, lambda h: attn.kernel_flash_attention(
+                p, h, cfg, causal=True, window=sub.window,
+                positions=positions))
+        elif sub.window and impl in ("banded", "flash") and sub.causal:
             out = _residual(p, x, cfg, lambda h: attn.banded_attention(
                 p, h, cfg, window=sub.window, positions=positions))
         elif impl == "flash" and sub.causal:

@@ -18,6 +18,11 @@ Design (scaled-down but production-shaped — see DESIGN.md §4):
     checkpoint written under a DIFFERENT bucket partitioning (size cap /
     pad multiple changed between runs) onto the template's layout —
     bit-exactly, via unbucket→rebucket of every role array.
+  * EF-residual elasticity: ``grad_err`` rows (per-dp-device compressor
+    state of the compressed gradient collective) zero-fill when the
+    template's dp count differs from the checkpoint's, instead of failing
+    the shape check — a dp rescale costs one step of compression error,
+    not the restore.
 """
 from __future__ import annotations
 
@@ -33,6 +38,13 @@ import numpy as np
 from repro.core import bucketing
 
 _SEP = "/"
+
+
+def _is_grad_err(name: str) -> bool:
+    """Leaf path of an error-feedback residual: ``TrainState.grad_err``
+    (tree layout) or ``BucketedOptState.grad_err`` (bucket layout) — both
+    registered with keyed pytree paths, so the keystr carries the name."""
+    return ".grad_err" in name
 
 
 def _find_layout(tree: Any) -> Optional[bucketing.BucketLayout]:
@@ -153,8 +165,18 @@ def restore(ckpt_dir: str, step: int, template: Any,
         if verify:
             got = hashlib.sha256(arr.tobytes()).hexdigest()
             assert got == meta["sha256"], f"checksum mismatch for {name}"
-        assert tuple(arr.shape) == tuple(t_leaf.shape), (name, arr.shape,
-                                                         t_leaf.shape)
+        if tuple(arr.shape) != tuple(t_leaf.shape):
+            if _is_grad_err(name) and \
+                    tuple(arr.shape[1:]) == tuple(t_leaf.shape[1:]):
+                # EF-residual elasticity: grad_err rows are PER-DEVICE
+                # compressor state (leading dim = dp index). Restoring onto
+                # a different dp count zero-fills them — the residual is a
+                # bounded O(ulp) carry, so dropping it costs one step of
+                # compression error, while a hard shape check would make
+                # every dp rescale a restore failure.
+                arr = np.zeros(t_leaf.shape, arr.dtype)
+            else:
+                raise AssertionError((name, arr.shape, t_leaf.shape))
         sharding = getattr(t_leaf, "sharding", None)
         if sharding is not None and hasattr(t_leaf, "devices"):
             if arr.dtype != np.dtype(t_leaf.dtype):

@@ -48,6 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bucketing
 from repro.core.collage import CollageAdamW, StepMetrics
+from repro.kernels.collage_update import ops as kops
 from repro.core.precision import Strategy
 from repro.distributed import compression
 from repro.distributed import pipeline as pp
@@ -156,22 +157,6 @@ def _metric_dict(loss, lmetrics, om: StepMetrics) -> dict:
             "grad_norm": om.grad_norm}
 
 
-def _combine_shard_metrics(m: StepMetrics, total: int, axis) -> StepMetrics:
-    """Re-finalize StepMetrics whose partial sums cover only this device's
-    ZeRO shard: un-finalize → psum → finalize. ``total`` is the full
-    unpadded parameter count (the denominator step_bucketed already used)."""
-    dot = m.edq * m.update_norm
-    lost = m.imprecision_pct * (total / 100.0)
-    parts = jnp.stack([dot, m.update_norm ** 2, m.effective_norm ** 2,
-                       lost, m.grad_norm ** 2])
-    dot, un2, en2, lost, gn2 = jax.lax.psum(parts, axis)
-    un = jnp.sqrt(un2)
-    return StepMetrics(edq=dot / jnp.maximum(un, 1e-30), update_norm=un,
-                       effective_norm=jnp.sqrt(en2),
-                       imprecision_pct=100.0 * lost / total,
-                       grad_norm=jnp.sqrt(gn2))
-
-
 def _zero_step_metrics() -> StepMetrics:
     return StepMetrics(*(jnp.zeros((), jnp.float32),) * 5)
 
@@ -186,6 +171,7 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                             grad_compression: str = "none",
                             zero_shard: Optional[bool] = None,
                             pipeline_axis: Optional[str] = None,
+                            flash_min_len: Optional[int] = None,
                             donate: bool = False,
                             jit: bool = True) -> Callable:
     """Build the shard_map train step: (TrainState, batch) → (TrainState,
@@ -199,7 +185,12 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
     layout); "_ef" keeps the error-feedback residual.
     pipeline_axis: opt-in GPipe schedule for a uniform single-group decoder
     stack (tree layout, pre-chunked batches, no compression).
+    flash_min_len: override of ``model.cfg.flash_min_len`` (the flash
+    train-path dispatch, models/attention.py). The flash kernels compose
+    with shard_map for free: the per-device body sees the LOCAL batch, so
+    the Pallas grid's batch/head dims are already post-dp/tp-split sizes.
     """
+    model = train_loop.with_flash(model, flash_min_len)
     bucketed = opt.policy.bucketing.enabled
     n_dp = _axis_size(mesh, axis)
     if zero_shard is None:
@@ -283,11 +274,19 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                      / n_dp).astype(g.dtype) for g in grads.data)
             else:
                 gdata = tuple(pmean32(g, axis) for g in grads.data)
-            new_params, new_opt, om = opt.step_bucketed(gdata, params,
-                                                        opt_state)
             if zero_shard and opt.compute_metrics:
-                om = _combine_shard_metrics(om, params.layout.total_size,
-                                            axis)
+                # cross-shard StepMetrics: the optimizer exports its RAW
+                # (5,) metric partials (kernels.collage_update.ops), the
+                # engine psums them over the dp axis and finalizes ONCE —
+                # definitionally exact, no hand-maintained inverse of the
+                # finalize step
+                new_params, new_opt, parts = opt.step_bucketed(
+                    gdata, params, opt_state, metrics_partials=True)
+                om = kops.finalize_metrics(jax.lax.psum(parts, axis),
+                                           params.layout.total_size)
+            else:
+                new_params, new_opt, om = opt.step_bucketed(gdata, params,
+                                                            opt_state)
         else:
             if dtype is not None:
                 # residual leaves carry a per-device dim: strip this

@@ -93,8 +93,22 @@ def init_state(model: Model, opt: CollageAdamW, key,
     return TrainState(params, opt_state, err)
 
 
+def with_flash(model: Model, flash_min_len: Optional[int]) -> Model:
+    """Step-builder override of ``cfg.flash_min_len`` (None = keep cfg).
+
+    The flash dispatch itself lives in the model (models/attention.py);
+    this hook lets a launcher flip it per-step-function without rebuilding
+    configs — the sharded engine threads it the same way so a flash train
+    step and a masked eval step can share one model object."""
+    if flash_min_len is None:
+        return model
+    cfg = dataclasses.replace(model.cfg, flash_min_len=int(flash_min_len))
+    return dataclasses.replace(model, cfg=cfg)
+
+
 def make_accum_grads(model: Model, *, microbatch: int = 0,
-                     remat: str = "none") -> Callable:
+                     remat: str = "none",
+                     flash_min_len: Optional[int] = None) -> Callable:
     """Build ``accum(params, batch) → (loss, metrics, grads)``.
 
     Shared by the single-program step below and the sharded engine.
@@ -102,7 +116,9 @@ def make_accum_grads(model: Model, *, microbatch: int = 0,
     and accumulate grads in fp32 with a lax.scan (bounded activation
     memory — the paper's Table 8 trade-off). Pre-chunked (n, mb, L) batches
     are consumed as-is (loader-side chunking avoids a GSPMD reshape of the
-    dp-sharded batch dim)."""
+    dp-sharded batch dim). flash_min_len overrides the model's flash
+    dispatch threshold (``with_flash``)."""
+    model = with_flash(model, flash_min_len)
 
     def loss_fn(params, batch):
         if isinstance(params, bucketing.BucketedParams):
@@ -160,7 +176,8 @@ def _apply_opt(opt: CollageAdamW, grads, params, opt_state):
 def make_train_step(model: Model, opt: CollageAdamW, *,
                     microbatch: int = 0, remat: str = "none",
                     grad_compression: str = "none",
-                    psum_axis: Optional[str] = None) -> Callable:
+                    psum_axis: Optional[str] = None,
+                    flash_min_len: Optional[int] = None) -> Callable:
     """Build the pure train_step(state, batch) → (state, metrics).
 
     psum_axis: when run under shard_map, the named axis to pmean gradients
@@ -171,7 +188,8 @@ def make_train_step(model: Model, opt: CollageAdamW, *,
     round-trip that *models* the wire loss — use train/sharded.py for the
     real compressed collective.
     """
-    accum_grads = make_accum_grads(model, microbatch=microbatch, remat=remat)
+    accum_grads = make_accum_grads(model, microbatch=microbatch, remat=remat,
+                                   flash_min_len=flash_min_len)
     dtype, use_ef = compression.parse_spec(grad_compression)
 
     def train_step(state: TrainState, batch):

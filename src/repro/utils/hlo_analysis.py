@@ -496,6 +496,30 @@ def stablehlo_collectives(text: str) -> list:
     return out
 
 
+def quadratic_buffers(text: str, seq_len: int) -> list:
+    """Score-class intermediates in IR text: every tensor shape with TWO OR
+    MORE dims ≥ ``seq_len`` (an attention-score buffer is (…, L, L); no
+    other tensor of a flash train step has two sequence-sized dims when the
+    model dims are kept < L). Handles both compiled-HLO (``f32[a,b]``) and
+    StableHLO (``tensor<axbxf32>``) spellings, so the assert can run on the
+    LOWERED IR — before XLA optimization gets a chance to fuse (or fail to
+    fuse) the buffer away. Used by benchmarks/attention.py for the
+    "no O(L²) buffer in the L≥4k flash train step" acceptance claim."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        if sum(1 for d in ds if d >= seq_len) >= 2:
+            out.append(f"{dt}[{dims}]")
+    for m in _TENSOR_RE.finditer(text):
+        dims, dt = m.groups()
+        ds = [int(d) for d in (dims or "").split("x") if d]
+        if sum(1 for d in ds if d >= seq_len) >= 2:
+            out.append(f"tensor<{dims}x{dt}>")
+    return out
+
+
 def collective_dtype_census(text: str) -> dict:
     """{kind: {dtype: count}} over the StableHLO collectives."""
     census: dict = {}

@@ -455,6 +455,109 @@ class TestCheckpointMigration:
                 assert _eq(a, b)
 
 
+class TestEFResidualElasticity:
+    """grad_err rows are per-dp-device compressor state: restoring a
+    checkpoint onto a DIFFERENT dp count zero-fills them instead of failing
+    the shape check (ROADMAP item); every other leaf restores bit-exactly."""
+
+    @pytest.mark.parametrize("n_dp_new", [4, 1])
+    def test_bucketed_grad_err_zero_fills_across_dp(self, n_dp_new):
+        from repro.configs import get_config
+        from repro.models.model import build_model
+        from repro.train import checkpoint, train_loop
+        model = build_model(get_config("gpt-tiny", smoke=True))
+        opt = _opt(Strategy.C_COLLAGE_PLUS, bucketed=True)
+        key = jax.random.PRNGKey(0)
+        state8 = train_loop.init_state(model, opt, key, "fp8_ef", n_dp=8)
+        # make the residual rows nonzero so a silent carry-over would show
+        ge = tuple(e + jnp.float32(i + 1)
+                   for i, e in enumerate(state8.opt_state.grad_err))
+        state8 = train_loop.TrainState(
+            state8.params,
+            state8.opt_state.__class__(
+                **{**{f: getattr(state8.opt_state, f)
+                      for f in ("step", "m", "vhi", "vlo", "delta",
+                                "master", "rng", "layout")},
+                   "grad_err": ge}),
+            None)
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, state8, extra={"step": 1})
+            template = train_loop.init_state(model, opt, key, "fp8_ef",
+                                             n_dp=n_dp_new)
+            restored, _ = checkpoint.restore_bucketed(d, 1, template)
+        for e, t in zip(restored.opt_state.grad_err,
+                        template.opt_state.grad_err):
+            assert e.shape == t.shape and e.shape[0] == n_dp_new
+            assert not np.asarray(e).any()          # zero-filled
+        # everything else survives bit-exactly
+        _assert_tree_eq(restored.params.data, state8.params.data)
+        _assert_tree_eq(restored.opt_state.m, state8.opt_state.m)
+
+    def test_tree_layout_grad_err_zero_fills(self):
+        from repro.configs import get_config
+        from repro.models.model import build_model
+        from repro.train import checkpoint, train_loop
+        model = build_model(get_config("gpt-tiny", smoke=True))
+        opt = _opt(Strategy.C_COLLAGE_PLUS)
+        key = jax.random.PRNGKey(0)
+        state8 = train_loop.init_state(model, opt, key, "bf16_ef", n_dp=8)
+        state8 = train_loop.TrainState(
+            state8.params, state8.opt_state,
+            jax.tree_util.tree_map(lambda e: e + 1, state8.grad_err))
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, state8, extra={"step": 1})
+            template = train_loop.init_state(model, opt, key, "bf16_ef",
+                                             n_dp=2)
+            restored, _ = checkpoint.restore_bucketed(d, 1, template)
+        for e in jax.tree_util.tree_leaves(restored.grad_err):
+            assert e.shape[0] == 2 and not np.asarray(e, np.float32).any()
+        _assert_tree_eq(restored.params, state8.params)
+
+    def test_same_dp_keeps_residual(self):
+        from repro.configs import get_config
+        from repro.models.model import build_model
+        from repro.train import checkpoint, train_loop
+        model = build_model(get_config("gpt-tiny", smoke=True))
+        opt = _opt(Strategy.C_COLLAGE_PLUS)
+        key = jax.random.PRNGKey(0)
+        state = train_loop.init_state(model, opt, key, "bf16_ef", n_dp=4)
+        state = train_loop.TrainState(
+            state.params, state.opt_state,
+            jax.tree_util.tree_map(lambda e: e + 1, state.grad_err))
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, state, extra={"step": 1})
+            template = train_loop.init_state(model, opt, key, "bf16_ef",
+                                             n_dp=4)
+            restored, _ = checkpoint.restore_bucketed(d, 1, template)
+        _assert_tree_eq(restored.grad_err, state.grad_err)
+
+
+class TestMetricsPartials:
+    """ops.bucketed_step(metrics_partials=True): raw (5,) partials finalize
+    to the exact same StepMetrics as the default path — what makes the
+    sharded engine's cross-shard combine definitionally exact."""
+
+    def test_partials_finalize_to_step_metrics(self):
+        from repro.kernels.collage_update import ops as kops
+        params = _tree()
+        opt = _opt(Strategy.C_COLLAGE_PLUS, bucketed=True)
+        bp, bs = opt.init_bucketed(params)
+        g = _bucketed_grads(_grads(), bp.layout)
+        _, _, m = opt.step_bucketed(g, bp, bs)
+        _, _, parts = opt.step_bucketed(g, bp, bs, metrics_partials=True)
+        assert isinstance(parts, tuple) and len(parts) == 5
+        m2 = kops.finalize_metrics(parts, bp.layout.total_size)
+        for a, b in zip(m, m2):
+            assert _eq(a, b), (m, m2)
+        # the partials path must not smuggle a concat into the jaxpr either
+        from benchmarks.optimizer_step import count_prims
+        jx = jax.make_jaxpr(
+            lambda g, p, s: opt.step_bucketed(g, p, s,
+                                              metrics_partials=True))(
+            g, bp, bs)
+        assert sum(count_prims(jx).values()) == 0, count_prims(jx)
+
+
 class TestTrainLoopBucketed:
     def test_end_to_end_matches_tree_path(self):
         """Full train_step (model fwd/bwd through the bucket views +

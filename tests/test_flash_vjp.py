@@ -1,0 +1,289 @@
+"""Flash-attention training path: custom-VJP Pallas kernels vs the masked
+oracle (kernels/flash_attention, models/attention.py dispatch).
+
+  * kernel-level: forward AND ``jax.grad`` vs ``ref.attention_ref`` swept
+    over causal × sliding-window × GQA × odd-L (block padding) in fp32
+    (tight tolerance) and bf16;
+  * model-level: full train loss/grads and prefill with
+    ``cfg.flash_min_len`` set ≡ the masked baseline, including the
+    banded-local gemma3 pattern (windowed layers dispatch too);
+  * engine-level: dp=8 sharded train step with flash enabled ≡ the
+    single-device flash step (subprocess with 8 virtual host devices).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import make_batch_fn
+from repro.kernels.flash_attention.flash_attention import (
+    _band_lo_block, flash_attention, flash_mha)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.model import build_model
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _qkv(key, B, H, Hkv, L, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    mk = lambda k, h: (jax.random.normal(k, (B, h, L, dh), jnp.float32)
+                       * 0.5).astype(dtype)
+    return mk(ks[0], H), mk(ks[1], Hkv), mk(ks[2], Hkv)
+
+
+# --------------------------------------------------------------------------
+# kernel level
+# --------------------------------------------------------------------------
+
+SWEEP = [
+    # L, H, Hkv, dh, causal, window   (odd L exercises the block padding)
+    (128, 4, 4, 32, True, 0),
+    (96, 4, 2, 16, True, 0),          # GQA + odd L
+    (200, 4, 1, 32, True, 0),         # group 4, odd L
+    (256, 2, 1, 64, True, 64),        # sliding window + GQA
+    (200, 4, 2, 32, True, 48),        # window + GQA + odd L
+    (64, 2, 2, 16, True, 16),         # window smaller than the block
+    (128, 2, 1, 32, False, 0),        # non-causal (encoder-style)
+    (100, 2, 2, 16, False, 0),        # non-causal + padding
+    (192, 2, 1, 32, False, 48),       # non-causal + window (distinct
+    #                                   loop-bound paths in all 3 kernels)
+]
+
+
+class TestFlashVJP:
+    @pytest.mark.parametrize("L,H,Hkv,dh,causal,window", SWEEP)
+    def test_fwd_and_grads_match_oracle_fp32(self, L, H, Hkv, dh, causal,
+                                             window):
+        B = 2
+        q, k, v = _qkv(jax.random.PRNGKey(L + H + window), B, H, Hkv, L, dh)
+        w = jax.random.normal(jax.random.PRNGKey(7), (B, H, L, dh))
+
+        def f(q, k, v):
+            return (flash_mha(q, k, v, causal=causal, window=window,
+                              blk_q=64, blk_k=64, interpret=True) * w).sum()
+
+        def r(q, k, v):
+            return (attention_ref(q, k, v, causal=causal, window=window)
+                    * w).sum()
+
+        got = flash_mha(q, k, v, causal=causal, window=window,
+                        blk_q=64, blk_k=64, interpret=True)
+        want = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+        gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+        for a, b, name in zip(gf, gr, ("dq", "dk", "dv")):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5,
+                err_msg=f"{name} (L={L}, H={H}/{Hkv}, causal={causal}, "
+                        f"window={window})")
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16])
+    def test_grads_bf16(self, dtype):
+        q, k, v = _qkv(jax.random.PRNGKey(3), 2, 4, 2, 128, 32, dtype)
+
+        def loss(fn):
+            return lambda q, k, v: fn(q, k, v).astype(jnp.float32).sum()
+
+        gf = jax.grad(loss(lambda q, k, v: flash_mha(
+            q, k, v, causal=True, blk_q=64, blk_k=64, interpret=True)),
+            argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss(lambda q, k, v: attention_ref(
+            q, k, v, causal=True)), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gf, gr):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=0.05, atol=0.05)
+
+    def test_tiny_L_pads_to_one_block(self):
+        """L far below the block size: zero-padding + valid-len mask."""
+        q, k, v = _qkv(jax.random.PRNGKey(5), 1, 2, 2, 13, 16)
+        got = flash_mha(q, k, v, causal=True, blk_q=128, blk_k=128,
+                        interpret=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_padded_row_lse_parks_at_big(self):
+        """Fully-masked (padded) rows must publish LSE = +1e30, so the
+        backward recomputation exp(NEG_INF − lse) is exactly 0 — the
+        invariant any future per-chunk LSE merge (sequence parallelism /
+        HBM streaming) relies on. Guarding on l would NOT detect them:
+        masked tiles contribute p = exp(NEG_INF − NEG_INF) = 1 to l."""
+        from repro.kernels.flash_attention.flash_attention import _mha_fwd
+        L = 40                                  # pads to one 128 block
+        q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, L, 16)
+        # causal + window: padded rows beyond L + window are fully masked
+        _, (_, _, _, _, lse) = _mha_fwd(q, k, v, True, 8, 128, 128, True)
+        lse = np.asarray(lse)
+        assert (lse[:, :, :L] < 1e29).all()     # real rows: finite stats
+        assert (lse[:, :, L + 8:] == 1e30).all(), lse[0, 0, L + 8:]
+
+    def test_band_lo_block_floor_divide(self):
+        """The sliding-window block skip: first visited key block must
+        contain kpos = qpos_min − window + 1 — the old (qpos_min − window)
+        floor-divide visited one extra fully-masked block at band edges,
+        and a wrong-direction error would SKIP live keys."""
+        blk_q = blk_k = 64
+        for qi in range(8):
+            for window in (1, 63, 64, 65, 128, 129):
+                lo = int(_band_lo_block(jnp.int32(qi), blk_q, blk_k, window))
+                first_valid = max(qi * blk_q - window + 1, 0)
+                assert lo == first_valid // blk_k, (qi, window, lo)
+                # no live key below the first visited block …
+                assert first_valid >= lo * blk_k
+                # … and the first visited block DOES hold a live key
+                assert first_valid < (lo + 1) * blk_k
+
+    def test_windowed_fwd_at_band_edge_blocks(self):
+        """window aligned so the band edge lands exactly on a block
+        boundary (the floor-divide edge the satellite fix targets)."""
+        for window in (63, 64, 65):
+            q, k, v = _qkv(jax.random.PRNGKey(window), 1, 2, 2, 256, 32)
+            got = flash_mha(q, k, v, causal=True, window=window,
+                            blk_q=64, blk_k=64, interpret=True)
+            want = attention_ref(q, k, v, causal=True, window=window)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-5, err_msg=str(window))
+
+    def test_forward_only_wrapper(self):
+        """The serving entry point (jitted, fwd-only) still matches."""
+        q, k, v = _qkv(jax.random.PRNGKey(11), 1, 4, 2, 256, 32,
+                       jnp.bfloat16)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=0.05, atol=0.02)
+
+
+# --------------------------------------------------------------------------
+# model level
+# --------------------------------------------------------------------------
+
+def _models(arch: str, f32: bool = True):
+    cfg = get_config(arch, smoke=True)
+    if f32:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    masked = build_model(cfg)
+    flash = build_model(dataclasses.replace(cfg, flash_min_len=16,
+                                            flash_block=32))
+    return masked, flash
+
+
+class TestModelDispatch:
+    @pytest.mark.parametrize("arch", ["gpt-tiny", "gemma3-27b",
+                                      "granite-3-2b"])
+    def test_train_loss_and_grads_match_masked(self, arch):
+        """cfg.flash_min_len dispatch ≡ masked baseline: loss and every
+        parameter gradient (fp32 model, fp32 tolerance). gemma3 covers the
+        banded-local pattern — windowed layers dispatch to flash too."""
+        masked, flash = _models(arch)
+        L = 48                                   # odd vs flash_block=32
+        batch = make_batch_fn(masked.cfg, ShapeConfig("t", L, 2, "train"))(0)
+        params = masked.init(jax.random.PRNGKey(0))
+        (l0, _), g0 = jax.value_and_grad(
+            lambda p: masked.loss(p, batch), has_aux=True)(params)
+        (l1, _), g1 = jax.value_and_grad(
+            lambda p: flash.loss(p, batch), has_aux=True)(params)
+        assert abs(float(l0) - float(l1)) < 1e-5, (arch, float(l0), float(l1))
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(g0),
+                jax.tree_util.tree_leaves_with_path(g1)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5,
+                err_msg=f"{arch}{jax.tree_util.keystr(path)}")
+
+    def test_prefill_matches_masked(self):
+        """Prefill (serve path) logits + KV caches under flash dispatch."""
+        masked, flash = _models("gpt-tiny")
+        batch = {"tokens": make_batch_fn(
+            masked.cfg, ShapeConfig("t", 40, 2, "train"))(0)["tokens"]}
+        params = masked.init(jax.random.PRNGKey(1))
+        lg0, st0 = masked.prefill(params, batch, 64)
+        lg1, st1 = flash.prefill(params, batch, 64)
+        np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1),
+                                   rtol=1e-4, atol=1e-4)
+        for a, b in zip(jax.tree_util.tree_leaves(st0.layers),
+                        jax.tree_util.tree_leaves(st1.layers)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_short_sequences_keep_masked_path(self):
+        """Below flash_min_len the dispatch must NOT change the program —
+        bit-identical logits to the masked model."""
+        cfg = dataclasses.replace(get_config("gpt-tiny", smoke=True),
+                                  flash_min_len=64)
+        masked = build_model(dataclasses.replace(cfg, flash_min_len=0))
+        gated = build_model(cfg)
+        batch = make_batch_fn(cfg, ShapeConfig("t", 32, 2, "train"))(0)
+        params = masked.init(jax.random.PRNGKey(0))
+        a, _ = masked.forward(params, batch)
+        b, _ = gated.forward(params, batch)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# engine level (dp=8 shard_map, subprocess for the virtual device count)
+# --------------------------------------------------------------------------
+
+class TestShardedFlash:
+    def test_dp8_sharded_step_matches_single_device(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        code = textwrap.dedent("""
+            import dataclasses
+            import jax, numpy as np
+            from repro.configs import get_config
+            from repro.configs.base import ShapeConfig
+            from repro.core.collage import CollageAdamW
+            from repro.core.precision import PrecisionPolicy, Strategy
+            from repro.data.synthetic import make_batch_fn
+            from repro.models.model import build_model
+            from repro.train import sharded, train_loop
+
+            mesh = jax.make_mesh((8,), ("data",))
+            cfg = dataclasses.replace(get_config("gpt-tiny", smoke=True),
+                                      dtype="float32", flash_block=32)
+            model = build_model(cfg)
+            batch_fn = make_batch_fn(cfg, ShapeConfig("t", 48, 16, "train"))
+            opt = CollageAdamW(1e-3, b2=0.95, policy=PrecisionPolicy(
+                strategy=Strategy.C_COLLAGE_PLUS))
+            # flash_min_len threads through BOTH step builders
+            ref_step = jax.jit(train_loop.make_train_step(
+                model, opt, flash_min_len=16))
+            step = sharded.make_sharded_train_step(
+                model, opt, mesh, flash_min_len=16)
+            s = train_loop.init_state(model, opt, jax.random.PRNGKey(0))
+            sd = sharded.device_put_state(
+                sharded.init_state(model, opt, jax.random.PRNGKey(0), mesh),
+                mesh)
+            for i in range(2):
+                s, mref = ref_step(s, batch_fn(i))
+                sd, m = step(sd, batch_fn(i))
+                assert abs(float(mref["loss"]) - float(m["loss"])) < 1e-4, \\
+                    (i, float(mref["loss"]), float(m["loss"]))
+            a = np.concatenate([np.asarray(x, np.float32).ravel()
+                                for x in jax.tree_util.tree_leaves(s.params)])
+            b = np.concatenate([np.asarray(x, np.float32).ravel()
+                                for x in jax.tree_util.tree_leaves(sd.params)])
+            assert np.abs(a - b).max() < 5e-4, np.abs(a - b).max()
+            print("FLASH_DP8_OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, env=env,
+                             timeout=600)
+        assert out.returncode == 0, \
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+        assert "FLASH_DP8_OK" in out.stdout
