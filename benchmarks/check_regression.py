@@ -1,0 +1,213 @@
+"""CI benchmark-regression gate: diff STRUCTURAL metrics of a fresh
+BENCH_*.json against its committed baseline (``benchmarks/baselines/``).
+
+Every prior PR's perf claim lives in a BENCH json artifact — but an
+artifact nobody diffs is a claim nobody enforces: a reintroduced O(L²)
+score buffer, an uncompressed (f32) gradient collective, or a per-leaf
+collective storm would ship silently as long as the bench still *ran*.
+This gate turns the structural subset of each artifact into a hard CI
+contract:
+
+  BENCH_train_step    grad-collective op counts, collective×dtype census
+                      (a NEW wire dtype — e.g. f32 where the baseline
+                      shipped bf16/fp8 — fails), staged wire bytes,
+                      per-device compiled collective counts and FLOPs,
+                      every baseline-true ``ok`` claim;
+  BENCH_attention     flash train step stays quadratic-buffer-FREE, the
+                      masked baseline stays flagged (detector has teeth),
+                      ``ok`` claims;
+  BENCH_optimizer_step  steady-state concat/dynamic_slice counts of the
+                      bucketed step (must stay 0), jaxpr equation count
+                      (compile-size proxy — the bucketed step is O(1) in
+                      leaf count, a regression reintroduces O(leaves));
+  BENCH_decode        flat temp arena across generation lengths (zero
+                      per-step cache realloc), donated-step alias bytes
+                      covering the cache.
+
+Wall-clock numbers are deliberately NOT gated — they are machine noise on
+CI runners; every gated metric is a property of the lowered/compiled IR or
+of buffer accounting.
+
+  PYTHONPATH=src python -m benchmarks.check_regression BENCH_train_step.json
+  (baseline resolved by filename under --baseline-dir, default
+   benchmarks/baselines/)
+
+Exit 1 + a violation list on any regression. tests/test_bench_regression.py
+proves the gate fails on doctored artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+# headroom on size-like metrics (wire bytes, FLOPs, eqn counts): absorbs
+# benign lowering drift across jax point releases without letting a 2×
+# regression through. Counts (collective ops, concats, buffers) get ZERO
+# tolerance — they only move when the program structure moves.
+SIZE_TOL = 1.05
+
+
+def _viol(out: list, cond: bool, msg: str):
+    if not cond:
+        out.append(msg)
+
+
+def _check_ok_flags(cur: dict, base: dict, out: list, ctx: str):
+    for k, v in base.get("ok", {}).items():
+        if v:
+            _viol(out, bool(cur.get("ok", {}).get(k)),
+                  f"{ctx}: ok-claim '{k}' was true in baseline, now "
+                  f"{cur.get('ok', {}).get(k)!r}")
+
+
+def check_train_step(cur: dict, base: dict) -> list:
+    out: list = []
+    for name, b in base.get("census", {}).items():
+        c = cur.get("census", {}).get(name)
+        if c is None:
+            out.append(f"census '{name}' missing from current artifact")
+            continue
+        _viol(out, c["grad_ops"] <= b["grad_ops"],
+              f"census/{name}: grad collective ops {c['grad_ops']} > "
+              f"baseline {b['grad_ops']} (collective-count regression)")
+        _viol(out, c["staged_wire_bytes"]
+              <= b["staged_wire_bytes"] * SIZE_TOL,
+              f"census/{name}: staged wire bytes {c['staged_wire_bytes']} "
+              f"> baseline {b['staged_wire_bytes']}×{SIZE_TOL}")
+        new_kinds = set(c["grad_ops_by_dtype"]) - set(b["grad_ops_by_dtype"])
+        _viol(out, not new_kinds,
+              f"census/{name}: NEW collective×dtype kinds {sorted(new_kinds)}"
+              f" — an operand-dtype regression (e.g. f32 on a compressed "
+              f"path) or an extra collective class")
+    for name, b in base.get("timing", {}).items():
+        c = cur.get("timing", {}).get(name)
+        if c is None:
+            out.append(f"timing '{name}' missing from current artifact")
+            continue
+        for kind, n in b.get("per_device_collective_counts", {}).items():
+            got = c.get("per_device_collective_counts", {}).get(kind, 0)
+            _viol(out, got <= n,
+                  f"timing/{name}: compiled {kind} count {got} > "
+                  f"baseline {n}")
+        _viol(out, c["per_device_flops"]
+              <= b["per_device_flops"] * SIZE_TOL,
+              f"timing/{name}: per-device FLOPs {c['per_device_flops']:.3e}"
+              f" > baseline {b['per_device_flops']:.3e}×{SIZE_TOL}")
+    _check_ok_flags(cur, base, out, "train_step")
+    return out
+
+
+def check_attention(cur: dict, base: dict) -> list:
+    out: list = []
+    # a baseline-present key missing from the fresh artifact is itself a
+    # violation — otherwise a field rename silently vacates the gate
+    for key in ("flash_quadratic_buffers", "masked_quadratic_buffers"):
+        _viol(out, key not in base or key in cur,
+              f"attention: '{key}' present in baseline but missing from "
+              f"the current artifact — the gate would check nothing")
+    nb, nc = (len(base.get("flash_quadratic_buffers", [])),
+              len(cur.get("flash_quadratic_buffers", [])))
+    _viol(out, nc <= nb,
+          f"attention: flash train step has {nc} quadratic (≥L×L) buffers, "
+          f"baseline {nb} — the O(L²) score buffer is back")
+    if base.get("masked_quadratic_buffers"):
+        _viol(out, bool(cur.get("masked_quadratic_buffers")),
+              "attention: masked baseline no longer flags a quadratic "
+              "buffer — the detector lost its teeth")
+    _check_ok_flags(cur, base, out, "attention")
+    return out
+
+
+def check_optimizer_step(cur: dict, base: dict) -> list:
+    out: list = []
+    cur_by_n = {r["n_leaves"]: r for r in cur.get("results", [])}
+    for b in base.get("results", []):
+        c = cur_by_n.get(b["n_leaves"])
+        if c is None:
+            out.append(f"optimizer_step: n_leaves={b['n_leaves']} result "
+                       f"missing from current artifact")
+            continue
+        for prim, n in b["bucketed"]["prims"].items():
+            got = c["bucketed"]["prims"].get(prim, 0)
+            _viol(out, got <= n,
+                  f"optimizer_step[{b['n_leaves']} leaves]: bucketed "
+                  f"steady-state '{prim}' count {got} > baseline {n} — "
+                  f"the concat-free jaxpr contract is broken")
+        _viol(out, c["bucketed"]["eqns"] <= b["bucketed"]["eqns"] * SIZE_TOL,
+              f"optimizer_step[{b['n_leaves']} leaves]: bucketed jaxpr "
+              f"eqns {c['bucketed']['eqns']} > baseline "
+              f"{b['bucketed']['eqns']}×{SIZE_TOL} (compile-size "
+              f"regression — O(leaves) work is back in the step)")
+    return out
+
+
+def check_decode(cur: dict, base: dict) -> list:
+    out: list = []
+    _viol(out, cur["temp_bytes_long"] <= cur["temp_bytes_short"] * 1.01,
+          f"decode: temp arena grows with generation length "
+          f"({cur['temp_bytes_short']} → {cur['temp_bytes_long']} B) — "
+          f"per-step cache realloc is back")
+    _viol(out, cur["donated_step"]["alias_bytes"] >= cur["cache_bytes"],
+          f"decode: donated step aliases {cur['donated_step']['alias_bytes']}"
+          f" B < cache {cur['cache_bytes']} B — donation broke")
+    # baseline-relative: a UNIFORM arena/cache blow-up passes both
+    # self-consistency checks above, so gate absolute footprints too
+    _viol(out, cur["temp_bytes_short"]
+          <= base["temp_bytes_short"] * SIZE_TOL,
+          f"decode: temp arena {cur['temp_bytes_short']} B > baseline "
+          f"{base['temp_bytes_short']}×{SIZE_TOL}")
+    _viol(out, cur["cache_bytes"] <= base["cache_bytes"] * SIZE_TOL,
+          f"decode: cache {cur['cache_bytes']} B > baseline "
+          f"{base['cache_bytes']}×{SIZE_TOL}")
+    return out
+
+
+CHECKS = {
+    "BENCH_train_step.json": check_train_step,
+    "BENCH_attention.json": check_attention,
+    "BENCH_optimizer_step.json": check_optimizer_step,
+    "BENCH_decode.json": check_decode,
+}
+
+
+def check_file(path: str, baseline_path: str) -> list:
+    name = os.path.basename(path)
+    fn = CHECKS.get(name)
+    if fn is None:
+        return [f"{name}: no regression rules registered "
+                f"(known: {sorted(CHECKS)})"]
+    with open(path) as f:
+        cur = json.load(f)
+    with open(baseline_path) as f:
+        base = json.load(f)
+    return [f"{name}: {v}" for v in fn(cur, base)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+",
+                    help="fresh BENCH_*.json files to gate")
+    ap.add_argument("--baseline-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "baselines"))
+    args = ap.parse_args(argv)
+
+    violations: list = []
+    for path in args.artifacts:
+        baseline = os.path.join(args.baseline_dir, os.path.basename(path))
+        if not os.path.exists(baseline):
+            violations.append(f"{path}: no committed baseline at {baseline}")
+            continue
+        violations.extend(check_file(path, baseline))
+    if violations:
+        print(f"REGRESSION: {len(violations)} structural violation(s)")
+        for v in violations:
+            print(f"  FAIL {v}")
+        return 1
+    print(f"all {len(args.artifacts)} artifact(s) within structural "
+          f"baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Optional
 
 DRYRUN_DIR = pathlib.Path("experiments/dryrun")
 

@@ -41,7 +41,6 @@ N_DEV = 8
 
 def _bench(quick: bool, out_path: str) -> dict:
     import jax
-    import numpy as np
 
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig
@@ -52,7 +51,7 @@ def _bench(quick: bool, out_path: str) -> dict:
     from repro.distributed import compression
     from repro.distributed import sharding as shard_lib
     from repro.models.model import build_model
-    from repro.train import sharded, train_loop
+    from repro.train import sharded
     from repro.utils import hlo_analysis
 
     cfg = get_config("gpt-tiny", smoke=True)
@@ -84,6 +83,9 @@ def _bench(quick: bool, out_path: str) -> dict:
     def census(mesh, bucketed, compress, zero):
         _, state, step = build(mesh, bucketed, compress, zero)
         txt = jax.jit(step).lower(state, batch_fn(0)).as_text()
+        return _census_of(txt)
+
+    def _census_of(txt):
         colls = hlo_analysis.stablehlo_collectives(txt)
         # gradient-sized collectives only (scalars are metric pmeans)
         grad_colls = [c for c in colls if c["numel"] > 64]
@@ -93,6 +95,26 @@ def _bench(quick: bool, out_path: str) -> dict:
             "grad_ops_by_dtype": _by_dtype(grad_colls),
             "staged_wire_bytes": sum(c["bytes"] for c in grad_colls),
         }
+
+    def census_pipeline(compress):
+        # GPipe (2 stages × dp 4): the dp gradient reduction compresses at
+        # (leaf class × dtype) bucket granularity — stage chunks / embed /
+        # head each ship ONE compressed all-reduce (train/sharded.py)
+        pmesh = jax.make_mesh((2, 4), ("pipe", "data"))
+        opt = mkopt(False, pmesh)
+        state = sharded.init_state(model, opt, jax.random.PRNGKey(0),
+                                   pmesh, axis="data",
+                                   grad_compression=compress,
+                                   pipeline_axis="pipe")
+        state = sharded.device_put_state(state, pmesh, axis="data",
+                                         pipeline_axis="pipe")
+        step = sharded.make_sharded_train_step(
+            model, opt, pmesh, axis="data", pipeline_axis="pipe",
+            grad_compression=compress, jit=False)
+        chunked = jax.tree_util.tree_map(
+            lambda x: x.reshape((4, 8) + x.shape[1:]), batch_fn(0))
+        txt = jax.jit(step).lower(state, chunked).as_text()
+        return _census_of(txt)
 
     def _by_dtype(colls):
         out: dict = {}
@@ -136,6 +158,8 @@ def _bench(quick: bool, out_path: str) -> dict:
             "bucket_fp8_ef": census(mesh8, True, "fp8_ef", False),
             "bucket_uncompressed": census(mesh8, True, "none", False),
             "bucket_zero_bf16_ef": census(mesh8, True, "bf16_ef", True),
+            "pipeline_fp8_ef": census_pipeline("fp8_ef"),
+            "pipeline_uncompressed": census_pipeline("none"),
         },
         "timing": {
             "dp1_bucket_bf16_ef": timed(mesh1, True, "bf16_ef", False,
@@ -167,6 +191,15 @@ def _bench(quick: bool, out_path: str) -> dict:
         "dp8_per_device_flops_under_quarter_of_dp1":
             t["dp8_bucket_bf16_ef"]["per_device_flops"]
             < 0.25 * t["dp1_bucket_bf16_ef"]["per_device_flops"],
+        # pipeline parity (PR 5): the dp gradient reduction ships exactly
+        # one fp8 all-reduce per leaf class (stage / embed / head) and
+        # strictly fewer wire bytes than the uncompressed pipeline step
+        "pipeline_one_compressed_collective_per_leaf_class":
+            c["pipeline_fp8_ef"]["grad_ops_by_dtype"]
+            .get("all_reduce:f8E4M3FN") == 3,
+        "pipeline_compressed_fewer_wire_bytes":
+            c["pipeline_fp8_ef"]["staged_wire_bytes"]
+            < c["pipeline_uncompressed"]["staged_wire_bytes"],
     }
 
     with open(out_path, "w") as f:

@@ -1,0 +1,123 @@
+"""CI matrix self-check: every test file runs somewhere, every slow test
+is selected by some job.
+
+Two failure modes this guards against (both have bitten real matrices):
+
+  1. a new ``tests/test_*.py`` lands but no tier-1 shard lists it — the
+     suite passes while the file never runs;
+  2. a ``@pytest.mark.slow`` case lands in a file, but every job that
+     touches that file deselects slow (the tier-1 default is
+     ``-m "not slow"`` via pytest.ini) and no ``-m slow`` job selects it —
+     the case exists, collects, and never executes.
+
+Shard membership is read ONLY from the tier-1 matrix ``tests:`` lists; a
+mention in a comment or another job must not satisfy the guard. Slow
+coverage is read from every ``pytest`` invocation in the workflow that
+passes ``-m slow``: an invocation with no explicit test paths selects all
+files; one with paths selects exactly those.
+
+Runs in EVERY tier-1 shard (previously an inline heredoc in the single
+``slow`` job — a broken matrix wasn't caught until the slowest job ran).
+
+  python scripts/check_ci_shards.py [--workflow .github/workflows/ci.yml]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+
+def tier1_shard_files(yml: str) -> set:
+    """Files listed in the TIER-1 job's matrix ``tests:`` entries.
+
+    Scoped to the ``tier1:`` job block (up to the next same-indent job
+    key): a ``tests:`` mapping in some other job that never feeds a
+    pytest run must not satisfy the guard."""
+    m = re.search(r"^  tier1:\n(.*?)(?=^  [\w-]+:|\Z)", yml,
+                  re.M | re.S)
+    block = m.group(1) if m else ""
+    listed: set = set()
+    for line in re.findall(r"^\s+tests: (.+)$", block, re.M):
+        listed.update(line.split())
+    return listed
+
+
+def slow_selecting_invocations(yml: str) -> list:
+    """[(explicit test paths or None, ignored paths)] for every pytest run
+    with ``-m slow``. None = no explicit paths → the invocation collects
+    every test file except the ``--ignore``d ones. Backslash-continued
+    lines are joined first so a reformatted multi-line invocation can't
+    hide its paths or ignores from the match."""
+    out = []
+    yml = re.sub(r"\\\s*\n\s*", " ", yml)
+    for line in yml.splitlines():
+        if "pytest" not in line or re.search(r"^\s*#", line):
+            continue
+        if not re.search(r"-m\s+slow\b", line):
+            continue
+        ignores = set(re.findall(r"--ignore=(tests/test_\w+\.py)", line))
+        paths = [p for p in re.findall(r"(tests/test_\w+\.py)", line)
+                 if p not in ignores]
+        out.append((paths or None, ignores))
+    return out
+
+
+def slow_marked_files(tests_dir: pathlib.Path) -> set:
+    out = set()
+    for p in sorted(tests_dir.glob("test_*.py")):
+        text = p.read_text()
+        if re.search(r"pytest\.mark\.slow\b|pytestmark\s*=.*\bslow\b",
+                     text):
+            out.add(str(p.parent.name + "/" + p.name))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workflow", default=".github/workflows/ci.yml")
+    ap.add_argument("--tests-dir", default="tests")
+    args = ap.parse_args(argv)
+    yml = pathlib.Path(args.workflow).read_text()
+
+    errors = []
+
+    listed = tier1_shard_files(yml)
+    actual = {str(p) for p in pathlib.Path(args.tests_dir).glob("test_*.py")}
+    missing = actual - listed
+    if missing:
+        errors.append(f"test files in no tier-1 CI shard: {sorted(missing)}")
+    ghost = listed - actual
+    if ghost:
+        errors.append(f"shard matrix lists nonexistent files: "
+                      f"{sorted(ghost)}")
+
+    slow_files = slow_marked_files(pathlib.Path(args.tests_dir))
+    invocations = slow_selecting_invocations(yml)
+    if slow_files and not invocations:
+        errors.append(f"{len(slow_files)} files carry slow-marked tests "
+                      f"but no CI job passes '-m slow'")
+    else:
+        for f in sorted(slow_files):
+            covered = any((paths is None and f not in ignores)
+                          or (paths is not None and f in paths)
+                          for paths, ignores in invocations)
+            if not covered:
+                errors.append(
+                    f"slow-marked tests in {f} are selected by NO job: "
+                    f"tier-1 deselects slow (pytest.ini) and every "
+                    f"'-m slow' invocation names other files")
+
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        return 1
+    print(f"CI matrix OK: {len(actual)} test files sharded, "
+          f"slow tests in {len(slow_files)} files all selected "
+          f"({len(invocations)} '-m slow' invocation(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@ conditionals.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,7 +32,6 @@ its oracle is this module. Two execution layouts exist:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -150,21 +149,35 @@ class CollageAdamW:
 
     def step_bucketed(self, grads, bparams: bucketing.BucketedParams,
                       bstate: bucketing.BucketedOptState, *,
-                      metrics_partials: bool = False):
+                      metrics_partials: bool = False,
+                      elem_offsets=None):
         """One step over buckets: one fused launch per bucket, no per-step
         flatten/concat (tests assert the jaxpr is concat-free). ``grads`` is
         a BucketedParams (``jax.grad`` w.r.t. bucketed params) or a tuple of
         flat bucket arrays. ``metrics_partials=True`` returns the raw
         metric-partial 5-tuple in place of StepMetrics (see
         ops.bucketed_step) — how the ZeRO engine makes its cross-shard
-        metrics exact."""
+        metrics exact. ``elem_offsets`` (SR + ZeRO): per-bucket flat-axis
+        start of this shard inside the full bucket, so the counter-based
+        noise stream indexes elements bucket-globally and the sharded step
+        stays bit-identical to the unsharded one."""
         from repro.kernels.collage_update import ops as kops
         return kops.bucketed_step(self, grads, bparams, bstate,
-                                  metrics_partials=metrics_partials)
+                                  metrics_partials=metrics_partials,
+                                  elem_offsets=elem_offsets)
 
     # ------------------------------------------------------------------ step
-    def step(self, grads: Any, params: Any, state: CollageOptState
-             ) -> tuple[Any, CollageOptState, StepMetrics]:
+    def step(self, grads: Any, params: Any, state: CollageOptState, *,
+             metrics_partials: bool = False
+             ) -> tuple[Any, CollageOptState, Any]:
+        """One tree-layout step. ``metrics_partials=True`` returns, in place
+        of finalized StepMetrics, the PER-LEAF raw metric partials — a list
+        (treedef leaf order) of (⟨Δθ,Δθ̂⟩, ‖Δθ‖², ‖Δθ̂‖², #lost, ‖g‖²)
+        5-tuples. Raw partials are plain sums over elements, so a sharded
+        caller (the pipeline engine) can psum the stage-local leaves' tuples
+        over the stage axis, add the replicated leaves' once, and finalize a
+        single time — exact by construction, where combining the finalized
+        norms post-hoc is not (√ doesn't distribute over +)."""
         s = self.policy.strategy
         cdt = self.policy.param_dtype
         t = state.step + 1
@@ -175,6 +188,10 @@ class CollageAdamW:
         bc2 = 1.0 - jnp.float32(self.b2) ** tf
 
         if self.use_fused_kernel:
+            if metrics_partials:
+                raise ValueError("metrics_partials is a tree-layout feature "
+                                 "(per-leaf partials); the fused shim "
+                                 "reduces per bucket")
             # engine covers all six strategies + real StepMetrics; SR uses
             # the counter-based noise stream (differs bit-wise from the
             # per-leaf threefry stream below, equally unbiased).
@@ -201,8 +218,15 @@ class CollageAdamW:
                 zip(leaves_g, leaves_p, leaves_m, leaves_v, leaves_d, leaves_w, sub_keys)]
         (new_p, new_m, new_v, new_d, new_w, upd, eff) = map(list, zip(*outs))
 
-        metrics = self._metrics(leaves_g, upd, eff) if self.compute_metrics \
-            else StepMetrics(*(jnp.zeros((), jnp.float32),) * 5)
+        if metrics_partials:
+            metrics = [self._leaf_partials(g, u, e)
+                       for g, u, e in zip(leaves_g, upd, eff)] \
+                if self.compute_metrics \
+                else [(jnp.float32(0.0),) * 5 for _ in leaves_g]
+        elif self.compute_metrics:
+            metrics = self._metrics(leaves_g, upd, eff)
+        else:
+            metrics = StepMetrics(*(jnp.zeros((), jnp.float32),) * 5)
 
         unflat = treedef.unflatten
         new_state = CollageOptState(
@@ -305,18 +329,22 @@ class CollageAdamW:
         return theta32
 
     # ----------------------------------------------------------- diagnostics
-    def _metrics(self, grads, upds, effs) -> StepMetrics:
+    @staticmethod
+    def _leaf_partials(g, u, e) -> tuple:
+        """Raw metric partials of ONE leaf — the same 5 quantities the
+        bucket engine's kernel epilogue exports (ops.finalize_metrics
+        consumes either)."""
         f32 = jnp.float32
+        u32, e32 = _cast(u, f32), _cast(e, f32)
+        return (jnp.sum(u32 * e32), jnp.sum(u32 * u32), jnp.sum(e32 * e32),
+                jnp.sum(((jnp.abs(u32) > 0) & (e == 0)).astype(f32)),
+                jnp.sum(_cast(g, f32) ** 2))
 
-        def sq(x):
-            return jnp.sum(_cast(x, f32) ** 2)
-
-        un2 = sum(sq(u) for u in upds)
-        en2 = sum(sq(e) for e in effs)
-        dot = sum(jnp.sum(_cast(u, f32) * _cast(e, f32)) for u, e in zip(upds, effs))
-        gn2 = sum(sq(g) for g in grads)
-        lost = sum(jnp.sum((jnp.abs(_cast(u, f32)) > 0) & (e == 0))
-                   for u, e in zip(upds, effs))
+    def _metrics(self, grads, upds, effs) -> StepMetrics:
+        parts = [self._leaf_partials(g, u, e)
+                 for g, u, e in zip(grads, upds, effs)]
+        dot, un2, en2, lost, gn2 = (sum(p[k] for p in parts)
+                                    for k in range(5))
         total = sum(u.size for u in upds)
         un = jnp.sqrt(un2)
         return StepMetrics(

@@ -21,12 +21,11 @@ regions do not nest.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def split_stages(stacked_params, n_stages: int):
@@ -39,7 +38,7 @@ def split_stages(stacked_params, n_stages: int):
 
 
 def stage_schedule(body_fn: Callable, stage_params, xs_local, *, axis: str,
-                   n_stages: int):
+                   n_stages: int, with_aux: bool = False):
     """Per-device GPipe schedule: MUST run inside a shard_map that has the
     named ``axis`` of size ``n_stages``.
 
@@ -47,7 +46,21 @@ def stage_schedule(body_fn: Callable, stage_params, xs_local, *, axis: str,
     microbatch x (mb, L, D); ``stage_params`` leaves carry the local
     (L/S, ...) layer dim; ``xs_local`` is (n_micro, mb, L, D) — replicated
     input microbatches (only stage 0 actually feeds them in). Returns the
-    (n_micro, mb, L, D) outputs, psum-broadcast to every stage."""
+    (n_micro, mb, L, D) outputs, psum-broadcast to every stage.
+
+    ``with_aux=True``: body_fn returns ``(out, aux_scalar)`` (the MoE
+    load-balance penalty of this stage's layer chunk for one microbatch).
+    Per-tick aux is masked to REAL work — stage s runs microbatch m = t−s
+    only for 0 ≤ t−s < n_micro; bubble ticks chew zeros whose router aux
+    must not pollute the loss — summed over ticks, then psum'd over the
+    stage axis: the schedule returns ``(outs, Σ_layers Σ_micro aux)``,
+    exactly what the unpipelined stack's per-microbatch aux sums to.
+    Differentiable like the rest of the schedule. CAUTION for callers: the
+    closing psums (outputs AND aux) transpose to psum under
+    ``check_rep=False``, so every backward path through this schedule —
+    loss-through-outputs and aux-through-router alike — delivers gradients
+    S-fold; rescale by 1/n_stages exactly as train/sharded.py's
+    ``fix_body`` does for both."""
     S = n_stages
     n_micro = xs_local.shape[0]
     n_ticks = n_micro + S - 1
@@ -60,18 +73,23 @@ def stage_schedule(body_fn: Callable, stage_params, xs_local, *, axis: str,
         feed = jnp.where(t < n_micro,
                          xs_local[jnp.minimum(t, n_micro - 1)], zero)
         inp = jnp.where(stage == 0, feed, buf)
-        out = body_fn(stage_params, inp)
+        res = body_fn(stage_params, inp)
+        out, aux = res if with_aux else (res, jnp.zeros((), jnp.float32))
         nxt = jax.lax.ppermute(out, axis, perm)
         # emit this tick's output only if we are the last stage and the
         # tick corresponds to a real microbatch
         emit = jnp.where((stage == S - 1) & (t >= S - 1), out, zero)
-        return nxt, emit
+        real = (t >= stage) & (t - stage < n_micro)
+        aux = jnp.where(real, aux, jnp.zeros_like(aux))
+        return nxt, (emit, aux)
 
-    _, emits = jax.lax.scan(tick, zero, jnp.arange(n_ticks))
+    _, (emits, auxes) = jax.lax.scan(tick, zero, jnp.arange(n_ticks))
     # microbatch m completed at tick m + S - 1 on the last stage;
     # psum of the masked emits broadcasts them to every stage
-    outs = emits[S - 1:]
-    return jax.lax.psum(outs, axis)
+    outs = jax.lax.psum(emits[S - 1:], axis)
+    if not with_aux:
+        return outs
+    return outs, jax.lax.psum(jnp.sum(auxes), axis)
 
 
 def pipeline_apply(body_fn: Callable, staged_params, x_micro, *,

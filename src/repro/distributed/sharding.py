@@ -26,10 +26,9 @@ engine composes with FSDP for free. Pad buckets with
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bucketing

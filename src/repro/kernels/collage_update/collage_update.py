@@ -23,7 +23,11 @@ reduction happens in the wrapper — EDQ costs zero extra passes over HBM.
 bits per element derived from hash(seed, element-index) — no threaded key,
 so the kernel stays a pure elementwise pass; the identical pure-jnp
 definition is used by ``ref.py``, making kernel and oracle bit-identical by
-construction.
+construction. The element index is BUCKET-GLOBAL: a ZeRO-sharded caller
+passes ``elem_offset`` (this shard's start position inside the full bucket,
+``axis_index · padded/n_dp``) so every shard draws the exact noise bits the
+unsharded step would — SR + ZeRO is bit-identical to SR + replicated by
+construction (DESIGN.md §4).
 
 Numeric discipline matches repro.core.mcf exactly (the ref.py oracle):
 ``lax.reduce_precision`` realizes each bf16 rounding; on real TPU hardware
@@ -116,12 +120,13 @@ def collage_update_kernel(
         pt_decay: bool, compute_metrics: bool, block_rows: int):
     """One grid step over a (block_rows, 128) tile of the bucket.
 
-    refs layout: scalars (lr, bc1, bc2[, seed]) · g · state-field tiles ·
-    state-field output tiles · [metrics partial row]."""
+    refs layout: scalars (lr, bc1, bc2[, seed, elem_offset]) · g ·
+    state-field tiles · state-field output tiles · [metrics partial row]."""
     fields = _FIELDS[strategy]
     it = iter(refs)
     lr_ref, bc1_ref, bc2_ref = next(it), next(it), next(it)
     seed_ref = next(it) if strategy == "SR" else None
+    offset_ref = next(it) if strategy == "SR" else None
     g_ref = next(it)
     in_refs = {f: next(it) for f in fields}
     out_refs = {f: next(it) for f in fields}
@@ -190,7 +195,8 @@ def collage_update_kernel(
             eff = theta_new - theta
         elif strategy == "SR":
             i = pl.program_id(0)
-            base_idx = (i * block_rows * LANES).astype(jnp.uint32)
+            base_idx = offset_ref[0, 0] \
+                + (i * block_rows * LANES).astype(jnp.uint32)
             row = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 0)
             col = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 1)
             idx = base_idx + row * jnp.uint32(LANES) + col
@@ -232,7 +238,8 @@ def collage_update_kernel(
 @functools.partial(jax.jit, static_argnames=(
     "b1", "b2", "eps", "wd", "strategy", "pt_decay", "compute_metrics",
     "interpret", "block_rows"))
-def collage_bucket_update(state: dict, g, lr, bc1, bc2, seed=None, *,
+def collage_bucket_update(state: dict, g, lr, bc1, bc2, seed=None,
+                          elem_offset=None, *,
                           b1=0.9, b2=0.999, eps=1e-8, wd=0.0, strategy="C",
                           pt_decay=False, compute_metrics=False,
                           interpret=True, block_rows=BLOCK_ROWS):
@@ -240,7 +247,11 @@ def collage_bucket_update(state: dict, g, lr, bc1, bc2, seed=None, *,
     names (see ``state_fields``) to 1-D arrays of identical length N
     (N % 128 == 0 — the bucketing layout pads). Returns ``(new_state,
     partials)`` where partials is a (5,) f32 metrics vector (dot, ‖Δθ‖²,
-    ‖Δθ̂‖², lost-count, ‖g‖²) or None."""
+    ‖Δθ̂‖², lost-count, ‖g‖²) or None.
+
+    ``elem_offset`` (SR only, default 0): this array's element-0 position
+    inside the FULL bucket — a ZeRO shard passes its flat-axis start so the
+    counter-based noise stream indexes elements bucket-globally."""
     fields = _FIELDS[strategy]
     assert set(state) == set(fields), (sorted(state), fields)
     n = g.shape[0]
@@ -265,6 +276,10 @@ def collage_bucket_update(state: dict, g, lr, bc1, bc2, seed=None, *,
     if strategy == "SR":
         assert seed is not None, "SR needs a seed scalar"
         scalars.append(jnp.reshape(seed, (1, 1)).astype(jnp.uint32))
+        if elem_offset is None:
+            elem_offset = 0
+        scalars.append(jnp.reshape(
+            jnp.asarray(elem_offset), (1, 1)).astype(jnp.uint32))
     inputs = scalars + [t2(g)] + [t2(state[f]) for f in fields]
     in_specs = [scal] * len(scalars) + [tile] * (1 + len(fields))
 

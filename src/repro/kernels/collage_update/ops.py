@@ -52,21 +52,27 @@ _FIELD_ROLE = {"m": "m", "vhi": "vhi", "vlo": "vlo", "delta": "delta",
 
 
 def _update_one_bucket(opt, state_dict, g, lr, bc1, bc2, seed,
-                       interpret: bool):
+                       interpret: bool, elem_offset=None):
     """Fused update of one flat bucket: Pallas kernel or the bit-identical
-    pure-jnp oracle (same math, same metrics partial tiling)."""
+    pure-jnp oracle (same math, same metrics partial tiling).
+
+    ``elem_offset`` (SR): element-0's position inside the FULL bucket — a
+    ZeRO shard passes its flat-axis start so the counter-based noise is
+    indexed bucket-globally (bit-identical to the unsharded step)."""
     code = STRATEGY_CODE[opt.policy.strategy]
     kw = dict(b1=opt.b1, b2=opt.b2, eps=opt.eps, wd=opt.wd, strategy=code,
               pt_decay=(opt.policy.wd_mode == "pytorch"),
               compute_metrics=opt.compute_metrics)
     if opt.use_fused_kernel:
         return cu.collage_bucket_update(state_dict, g, lr, bc1, bc2, seed,
-                                        interpret=interpret, **kw)
+                                        elem_offset, interpret=interpret,
+                                        **kw)
     # flat library-semantics path (one fused XLA computation per bucket);
     # fast metrics sums — equal to the kernel's tiled partials up to f32
     # summation order (the tiled oracle mode is for bit-identity tests).
     return cu_ref.collage_bucket_update_ref(state_dict, g, lr, bc1, bc2,
-                                            seed, tiled_metrics=False, **kw)
+                                            seed, elem_offset,
+                                            tiled_metrics=False, **kw)
 
 
 def sum_partials(partials_list) -> tuple:
@@ -120,7 +126,8 @@ def _scalars(opt, t):
 
 def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
                   bstate: bucketing.BucketedOptState, *,
-                  metrics_partials: bool = False):
+                  metrics_partials: bool = False,
+                  elem_offsets=None):
     """One optimizer step over persistent buckets.
 
     ``grads``: BucketedParams (from ``jax.grad`` w.r.t. a BucketedParams) or
@@ -129,12 +136,20 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
     of f32 scalars) instead of finalized StepMetrics — a cross-shard
     caller (train/sharded.py ZeRO) psums them and calls
     :func:`finalize_metrics` once, which is exact by construction (no
-    un-finalize inverse to keep in sync)."""
+    un-finalize inverse to keep in sync).
+    ``elem_offsets``: per-bucket element offsets (uint32 scalars, one per
+    bucket) of this caller's shard inside the full bucket — a ZeRO-sharded
+    step passes ``axis_index · padded/n_dp`` so the SR noise stream stays
+    bucket-global and SR + ZeRO is bit-identical to the unsharded step.
+    None → offset 0 (unsharded). Ignored for non-SR strategies (the update
+    is otherwise purely elementwise)."""
     s = opt.policy.strategy
     layout = bparams.layout
     gdata = grads.data if isinstance(grads, bucketing.BucketedParams) \
         else tuple(grads)
     assert len(gdata) == layout.n_buckets
+    if elem_offsets is not None:
+        assert len(elem_offsets) == layout.n_buckets
     t = bstate.step + 1
     lr, bc1, bc2 = _scalars(opt, t)
     fields = cu.state_fields(STRATEGY_CODE[s])
@@ -148,8 +163,10 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
                 sd[f] = getattr(bstate, _FIELD_ROLE[f])[i]
         seed = bucketing.fold_seed(bstate.rng, t, i) if s is Strategy.SR \
             else None
+        off = elem_offsets[i] if elem_offsets is not None else None
         out, part = _update_one_bucket(opt, sd, gdata[i], lr, bc1, bc2,
-                                       seed, opt.kernel_interpret)
+                                       seed, opt.kernel_interpret,
+                                       elem_offset=off)
         for f in fields:
             new[f].append(out[f])
         if part is not None:

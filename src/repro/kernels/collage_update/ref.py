@@ -22,7 +22,8 @@ from repro.kernels.collage_update.collage_update import (
     BLOCK_ROWS, LANES, choose_block_rows, state_fields)
 
 
-def collage_bucket_update_ref(state: dict, g, lr, bc1, bc2, seed=None, *,
+def collage_bucket_update_ref(state: dict, g, lr, bc1, bc2, seed=None,
+                              elem_offset=None, *,
                               b1=0.9, b2=0.999, eps=1e-8, wd=0.0,
                               strategy="C", pt_decay=False,
                               compute_metrics=False,
@@ -32,7 +33,9 @@ def collage_bucket_update_ref(state: dict, g, lr, bc1, bc2, seed=None, *,
     ``tiled_metrics=True`` (oracle mode) mirrors the kernel's per-tile
     det_sum partials bit-for-bit; ``False`` computes the same partials with
     ordinary fused ``jnp.sum`` — O(1) ops for production-size buckets, equal
-    to the tiled result up to f32 summation order."""
+    to the tiled result up to f32 summation order. ``elem_offset`` shifts
+    the SR noise index the same way the kernel's scalar does (ZeRO shards
+    index elements bucket-globally)."""
     fields = state_fields(strategy)
     assert set(state) == set(fields), (sorted(state), fields)
     f32 = jnp.float32
@@ -96,6 +99,8 @@ def collage_bucket_update_ref(state: dict, g, lr, bc1, bc2, seed=None, *,
         elif strategy == "SR":
             assert seed is not None, "SR needs a seed scalar"
             idx = jnp.arange(n, dtype=jnp.uint32)
+            if elem_offset is not None:
+                idx = jnp.asarray(elem_offset).astype(jnp.uint32) + idx
             noise = bucketing.sr_noise_bits(idx, seed)
             new_p32 = bucketing.stochastic_round_bits(theta32 + upd32, noise)
             eff = new_p32 - theta32

@@ -30,7 +30,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, SHAPES, get_config
 from repro.core.collage import CollageAdamW

@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from functools import partial
 from typing import Optional, Sequence
 
 import jax

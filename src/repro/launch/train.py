@@ -18,9 +18,8 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeConfig
 from repro.core.collage import CollageAdamW, cosine_schedule
 from repro.core.precision import BucketPolicy, PrecisionPolicy, parse_strategy
@@ -98,11 +97,14 @@ def main(argv=None):
                          "(train/sharded.py); 1 = single-program step")
     ap.add_argument("--zero", action="store_true",
                     help="ZeRO-shard the flat buckets over the dp axis "
-                         "(needs --bucketed)")
+                         "(needs --bucketed; composes with --precision SR "
+                         "— the counter-based noise stream is shard-offset "
+                         "so the sharded run is bit-identical)")
     ap.add_argument("--pipeline-stages", type=int, default=1,
                     help="GPipe stages over a 'pipe' mesh axis (uniform "
-                         "decoder stacks; batch is chunked to --microbatch "
-                         "rows per microbatch)")
+                         "decoder stacks incl. MoE; batch is chunked to "
+                         "--microbatch rows per microbatch; composes with "
+                         "--grad-compression on the dp axis)")
     ap.add_argument("--sr-seed", type=int, default=0,
                     help="stochastic-rounding noise seed (--precision SR)")
     ap.add_argument("--flash-min-len", type=int, default=None,
@@ -125,7 +127,8 @@ def main(argv=None):
     if mesh is not None:
         state = sharded.init_state(model, opt, jax.random.PRNGKey(args.seed),
                                    mesh, axis="data",
-                                   grad_compression=args.grad_compression)
+                                   grad_compression=args.grad_compression,
+                                   pipeline_axis=pipeline_axis)
         zero_eff = args.zero or (args.bucketed and args.dp > 1
                                  and pipeline_axis is None)
         state = sharded.device_put_state(

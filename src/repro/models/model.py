@@ -29,9 +29,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tf
-from repro.models.layers import ACC, embed_init, embed_lookup, matmul, rms_norm, rms_norm_init
+from repro.models.layers import ACC, embed_init, embed_lookup, rms_norm, rms_norm_init
 
 PyTree = Any
+
+# MoE load-balance penalty weight in the training objective. The single
+# definition: Model.loss AND the pipelined loss (train/sharded.py) both
+# combine `ce + AUX_LOSS_COEF · aux` from here, so the two paths cannot
+# silently desynchronize.
+AUX_LOSS_COEF = 0.01
 
 
 def _as_tree(params):
@@ -173,7 +179,7 @@ class Model:
         if cfg.family == "vlm":   # loss only on the text segment
             logits = logits[:, batch["frontend"].shape[1]:]
         ce = self.token_ce(logits, batch["labels"])
-        total = ce + 0.01 * aux
+        total = ce + AUX_LOSS_COEF * aux
         return total, {"ce": ce, "aux": aux, "ppl": jnp.exp(ce)}
 
     # ------------------------------------------------------------ serving --

@@ -13,8 +13,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

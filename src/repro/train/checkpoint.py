@@ -18,11 +18,14 @@ Design (scaled-down but production-shaped — see DESIGN.md §4):
     checkpoint written under a DIFFERENT bucket partitioning (size cap /
     pad multiple changed between runs) onto the template's layout —
     bit-exactly, via unbucket→rebucket of every role array.
-  * EF-residual elasticity: ``grad_err`` rows (per-dp-device compressor
-    state of the compressed gradient collective) zero-fill when the
-    template's dp count differs from the checkpoint's, instead of failing
-    the shape check — a dp rescale costs one step of compression error,
-    not the restore.
+  * EF-residual elasticity: ``grad_err`` (per-device compressor state of
+    the compressed gradient collective) is always droppable — restore
+    matches leaves BY NAME, zero-fills template grad_err leaves the
+    checkpoint lacks, drops stored ones the template lacks, and zero-fills
+    on any shape mismatch. A dp or pipeline-stage rescale, a pipeline ↔
+    flat layout switch, or a compression toggle costs one step of
+    compression error, not the restore; non-grad_err structure mismatches
+    still fail hard.
 """
 from __future__ import annotations
 
@@ -142,21 +145,43 @@ def restore(ckpt_dir: str, step: int, template: Any,
     data = np.load(os.path.join(d, "arrays.npz"))
 
     flat_t, treedef = _flatten(template)
+    # leaves match BY NAME, not index: the grad_err subtree may change
+    # LAYOUT CLASS entirely across resumes (per-leaf tree ↔ pipeline
+    # bucket dict ↔ absent — dp/stage rescales and compression toggles
+    # all restructure it). Template grad_err leaves with no stored
+    # counterpart zero-fill; stored grad_err leaves the template lacks
+    # are dropped. Any OTHER name mismatch is still a hard error.
+    by_name = {meta["name"]: key for key, meta in manifest["arrays"].items()}
+    t_names = {name for name, _ in flat_t}
+    extra_stored = [n for n in by_name if n not in t_names]
+    missing_stored = [n for n, _ in flat_t if n not in by_name]
     hint = ""
-    if len(flat_t) != len(manifest["arrays"]) \
+    if (extra_stored or missing_stored) \
             and "bucket_layout" in manifest.get("extra", {}) \
             and _find_layout(template) is None:
         hint = (" — checkpoint holds a BUCKETED state; resume with "
                 "bucketing enabled (--bucketed) or restore_bucketed()")
-    assert len(flat_t) == len(manifest["arrays"]), \
-        f"checkpoint has {len(manifest['arrays'])} leaves, " \
-        f"template {len(flat_t)}{hint}"
+    bad = [n for n in extra_stored + missing_stored if not _is_grad_err(n)]
+    assert not bad, \
+        f"checkpoint/template structure mismatch on {sorted(bad)}{hint}"
     import ml_dtypes
+
+    def _put(arr, t_leaf):
+        sharding = getattr(t_leaf, "sharding", None)
+        if sharding is not None and hasattr(t_leaf, "devices"):
+            if arr.dtype != np.dtype(t_leaf.dtype):
+                arr = arr.astype(t_leaf.dtype)
+            return jax.device_put(arr, sharding)
+        return jax.numpy.asarray(arr, dtype=t_leaf.dtype)
+
     leaves = []
-    for i, (name, t_leaf) in enumerate(flat_t):
-        key = f"a{i}"
+    for name, t_leaf in flat_t:
+        key = by_name.get(name)
+        if key is None:       # grad_err leaf new to this layout: zero-fill
+            leaves.append(_put(np.zeros(t_leaf.shape, t_leaf.dtype),
+                               t_leaf))
+            continue
         meta = manifest["arrays"][key]
-        assert meta["name"] == name, (meta["name"], name)
         arr = data[key]
         if arr.dtype.kind in "u" and meta["dtype"] not in (
                 "uint8", "uint16", "uint32"):   # stored as raw-bit view
@@ -166,24 +191,19 @@ def restore(ckpt_dir: str, step: int, template: Any,
             got = hashlib.sha256(arr.tobytes()).hexdigest()
             assert got == meta["sha256"], f"checksum mismatch for {name}"
         if tuple(arr.shape) != tuple(t_leaf.shape):
-            if _is_grad_err(name) and \
-                    tuple(arr.shape[1:]) == tuple(t_leaf.shape[1:]):
+            if _is_grad_err(name):
                 # EF-residual elasticity: grad_err rows are PER-DEVICE
-                # compressor state (leading dim = dp index). Restoring onto
-                # a different dp count zero-fills them — the residual is a
-                # bounded O(ulp) carry, so dropping it costs one step of
-                # compression error, while a hard shape check would make
-                # every dp rescale a restore failure.
+                # compressor state (leading dim = dp index; stage·dp index
+                # for pipeline-mode buckets, whose per-stage bucket LENGTH
+                # also changes with the stage count). Restoring onto a
+                # different dp/stage layout zero-fills them — the residual
+                # is a bounded O(ulp) carry, so dropping it costs one step
+                # of compression error, while a hard shape check would make
+                # every dp or stage rescale a restore failure.
                 arr = np.zeros(t_leaf.shape, arr.dtype)
             else:
                 raise AssertionError((name, arr.shape, t_leaf.shape))
-        sharding = getattr(t_leaf, "sharding", None)
-        if sharding is not None and hasattr(t_leaf, "devices"):
-            if arr.dtype != np.dtype(t_leaf.dtype):
-                arr = arr.astype(t_leaf.dtype)
-            leaves.append(jax.device_put(arr, sharding))
-        else:
-            leaves.append(jax.numpy.asarray(arr, dtype=t_leaf.dtype))
+        leaves.append(_put(arr, t_leaf))
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, manifest["extra"]
 

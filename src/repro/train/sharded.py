@@ -32,9 +32,29 @@ run their layer scan through ``pipeline.stage_schedule`` inside the same
 shard_map — stage chunks arrive via a ``P(pipeline_axis)`` in_spec on the
 stacked-layer dim (no reshape), activations shift with ppermute, and the
 per-leaf gradient fixup (stage-local chunks / psum'd embedding / replicated
-head) happens before the dp reduction. Tree layout only; optimizer
-StepMetrics are zeroed in this mode (stage-partial norms don't combine
-post-hoc — ROADMAP open item).
+head) happens before the dp reduction. Tree layout only, but otherwise at
+parity with the flat dp path:
+
+  * dp gradient compression at (leaf-class × dtype) bucket granularity —
+    stage-local chunks, the embedding, and the head each concat into one
+    flat bucket per dtype, quantize once, and ship ONE compressed
+    all-reduce over the dp axis (EF residual rows live in
+    ``TrainState.grad_err`` keyed by bucket, leading dim = stage·dp device
+    index: each (stage, dp) cell quantizes a DIFFERENT gradient, so its
+    compressor state is its own);
+  * real StepMetrics: the tree-layout optimizer exports RAW per-leaf metric
+    partials, the engine psums the stage-local leaves' partials over the
+    pipeline axis, adds the replicated leaves' once, and finalizes a single
+    time (ops.finalize_metrics) — stage-partial norms combine exactly
+    because the partials are plain sums;
+  * MoE aux losses ride the stage schedule (per-tick aux masked to real
+    microbatches, psum'd across stages).
+
+SR + ZeRO: the counter-based noise stream indexes elements bucket-globally,
+so the per-device body passes ``axis_index · padded/n_dp`` as the
+per-bucket element offset into ``step_bucketed`` — every shard draws
+exactly the noise the unsharded step would, making SR + ZeRO bit-identical
+to SR + dp-replicated (tested at 10 steps in tests/test_sharded_engine.py).
 """
 from __future__ import annotations
 
@@ -54,8 +74,8 @@ from repro.distributed import compression
 from repro.distributed import pipeline as pp
 from repro.distributed import sharding as shard_lib
 from repro.models import transformer as tf
-from repro.models.layers import ACC, embed_lookup
-from repro.models.model import Model
+from repro.models.layers import embed_lookup
+from repro.models.model import AUX_LOSS_COEF, Model
 from repro.train import train_loop
 
 Axis = Union[str, tuple]
@@ -87,13 +107,20 @@ def state_pspecs(state: Any, *, axis: Axis, zero_shard: bool,
                  pipeline_axis: Optional[str] = None) -> Any:
     """PartitionSpecs for a TrainState under the engine.
 
-    grad_err leaves shard their leading per-device dim over ``axis``; ZeRO
-    buckets shard their flat axis; pipeline mode shards the stacked-layer
-    dim of decoder-group leaves (params and their co-shaped optimizer
-    state) over ``pipeline_axis``; everything else is replicated."""
+    grad_err leaves shard their leading per-device dim over ``axis`` (in
+    pipeline mode over ``(pipeline_axis, axis)`` — each (stage, dp) cell
+    quantizes a different gradient bucket, so compressor state is per
+    mesh cell, not per dp rank); ZeRO buckets shard their flat axis;
+    pipeline mode shards the stacked-layer dim of decoder-group leaves
+    (params and their co-shaped optimizer state) over ``pipeline_axis``;
+    everything else is replicated."""
     def leaf_fn(path, leaf):
         nd = getattr(leaf, "ndim", 0)
         if shard_lib._is_grad_err_leaf(path) and nd >= 1:
+            if pipeline_axis is not None:
+                return P((pipeline_axis,) + (axis if isinstance(axis, tuple)
+                                             else (axis,)),
+                         *_nones(nd - 1))
             return P(axis, *_nones(nd - 1))
         if pipeline_axis is not None and _in_groups(path) and nd >= 1:
             return P(pipeline_axis, *_nones(nd - 1))
@@ -125,12 +152,106 @@ def named_shardings(tree: Any, pspecs: Any, mesh: Mesh) -> Any:
 
 
 def init_state(model: Model, opt: CollageAdamW, key, mesh: Mesh, *,
-               axis: Axis = "data",
-               grad_compression: str = "none") -> train_loop.TrainState:
+               axis: Axis = "data", grad_compression: str = "none",
+               pipeline_axis: Optional[str] = None) -> train_loop.TrainState:
     """TrainState with one EF-residual row per dp device (see
-    train_loop.init_state)."""
-    return train_loop.init_state(model, opt, key, grad_compression,
-                                 n_dp=_axis_size(mesh, axis))
+    train_loop.init_state). In pipeline mode the EF residual is the
+    per-(leaf-class × dtype) flat-bucket dict of
+    :func:`pipeline_error_state` instead of the per-leaf tree."""
+    dtype, use_ef = compression.parse_spec(grad_compression)
+    if pipeline_axis is None:
+        return train_loop.init_state(model, opt, key, grad_compression,
+                                     n_dp=_axis_size(mesh, axis))
+    # pipeline mode: skip the per-leaf residual tree (an (n_dp, …) zero
+    # block per parameter leaf that would be discarded immediately) and
+    # attach the per-leaf-class bucket rows directly
+    state = train_loop.init_state(model, opt, key, "none")
+    if use_ef:
+        state = dataclasses.replace(
+            state, grad_err=pipeline_error_state(
+                state.params, mesh.shape[pipeline_axis],
+                _axis_size(mesh, axis), dtype))
+    return state
+
+
+# --------------------------------------------------------------------------
+# pipeline-mode gradient compression: (leaf class × dtype) flat buckets
+# --------------------------------------------------------------------------
+
+def _pipeline_leaf_class(path) -> str:
+    """Gradient leaf class under the pipeline fixup: ``stage`` (stacked
+    decoder chunks, stage-local), ``embed`` (psum'd over stages), ``head``
+    (final norm + lm head, replicated across stages). Each class quantizes
+    into its own flat bucket so the compressed dp collective count is
+    O(classes × dtypes), not O(leaves)."""
+    if _in_groups(path):
+        return "stage"
+    if any(isinstance(e, jax.tree_util.DictKey) and e.key == "embed"
+           for e in path):
+        return "embed"
+    return "head"
+
+
+def _pipeline_bucket_order(flat) -> dict:
+    """{bucket key: [leaf index]} over ``tree_flatten_with_path`` output —
+    insertion-ordered by first leaf, shared by init and the step body so
+    residual rows and in-step buckets always line up."""
+    order: dict = {}
+    for i, (path, leaf) in enumerate(flat):
+        key = f"{_pipeline_leaf_class(path)}:{jnp.dtype(leaf.dtype)}"
+        order.setdefault(key, []).append(i)
+    return order
+
+
+def pipeline_error_state(params: Any, n_stages: int, n_dp: int,
+                         dtype) -> dict:
+    """Zero EF residuals for the pipeline engine: one
+    ``(n_stages · n_dp, bucket_len)`` row-block per (leaf class × dtype)
+    bucket. ``bucket_len`` is the PER-STAGE length (stage-chunk leaves
+    contribute ``size / n_stages``); the leading dim is the flattened
+    (stage, dp) device index, sharded ``P((pipeline_axis, axis))``."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    order = _pipeline_bucket_order(flat)
+    rows = {}
+    for key, idxs in order.items():
+        length = 0
+        for i in idxs:
+            leaf = flat[i][1]
+            size = int(leaf.size)
+            if _pipeline_leaf_class(flat[i][0]) == "stage":
+                assert leaf.shape[0] % n_stages == 0, (leaf.shape, n_stages)
+                size //= n_stages
+            length += size
+        rdt = compression.residual_dtype(dtype, flat[idxs[0]][1].dtype)
+        rows[key] = jnp.zeros((n_stages * n_dp, length), rdt)
+    return rows
+
+
+def _compress_pipeline_grads(grads: Any, err_rows: Optional[dict], dtype,
+                             axis: Axis, n_dp: int):
+    """Bucket-granular EF-compressed dp mean of the (post-stage-fixup)
+    gradient tree: concat each (leaf class × dtype) bucket's leaves flat,
+    ONE quantize → psum → dequantize per bucket, slice the mean back to the
+    leaves. Returns (grads in leaf dtypes, new residual rows or None)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    order = _pipeline_bucket_order(flat)
+    new_leaves: list = [None] * len(flat)
+    new_rows: Optional[dict] = {} if err_rows is not None else None
+    for key, idxs in order.items():
+        parts = [flat[i][1].reshape(-1) for i in idxs]
+        bucket = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        err = err_rows[key][0] if err_rows is not None else None
+        mean32, resid = compression.pmean_compressed(bucket, err, dtype,
+                                                     axis, n_dp)
+        if new_rows is not None:
+            new_rows[key] = resid[None]
+        off = 0
+        for i in idxs:
+            leaf = flat[i][1]
+            seg = jax.lax.slice(mean32, (off,), (off + leaf.size,))
+            new_leaves[i] = seg.reshape(leaf.shape).astype(leaf.dtype)
+            off += leaf.size
+    return treedef.unflatten(new_leaves), new_rows
 
 
 def device_put_state(state, mesh: Mesh, *, axis: Axis = "data",
@@ -203,11 +324,6 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                              "(opt.policy.bucketing.enabled)")
         if not isinstance(axis, str):
             raise ValueError("zero_shard needs a single named dp axis")
-        if opt.policy.strategy is Strategy.SR:
-            raise ValueError(
-                "SR + ZeRO unsupported: the counter-based noise stream "
-                "indexes elements by bucket-global position, which a shard-"
-                "local step cannot see (ROADMAP open item)")
         # every bucket length is a multiple of pad_multiple, so checking it
         # checks every shard: shards must divide the dp axis, and for fp8
         # each shard must be a whole number of scaling blocks or the
@@ -226,9 +342,12 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
     if pipeline_axis is not None:
         if bucketed or zero_shard:
             raise ValueError("pipeline mode requires the tree layout")
-        if dtype is not None:
-            raise ValueError("pipeline + gradient compression unsupported "
-                             "(ROADMAP open item)")
+        if opt.use_fused_kernel:
+            # fail at build time, not mid-trace: the pipeline body needs
+            # the tree-layout step (per-leaf metric partials; the fused
+            # shim re-flattens and reduces per bucket)
+            raise ValueError("pipeline mode requires the tree-layout "
+                             "optimizer step (use_fused_kernel=False)")
         _check_pipelinable(model, mesh.shape[pipeline_axis])
 
     accum = train_loop.make_accum_grads(model, microbatch=microbatch,
@@ -274,6 +393,16 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                      / n_dp).astype(g.dtype) for g in grads.data)
             else:
                 gdata = tuple(pmean32(g, axis) for g in grads.data)
+            offs = None
+            if zero_shard and opt.policy.strategy is Strategy.SR:
+                # counter-based SR under ZeRO: this shard's elements start
+                # at axis_index · padded/n_dp inside each full bucket —
+                # passing that offset makes the noise stream bucket-global,
+                # so the sharded update is bit-identical to the unsharded
+                # one (the shard boundary never shows in the noise)
+                idx = jax.lax.axis_index(axis).astype(jnp.uint32)
+                offs = tuple(idx * jnp.uint32(b.padded // n_dp)
+                             for b in params.layout.buckets)
             if zero_shard and opt.compute_metrics:
                 # cross-shard StepMetrics: the optimizer exports its RAW
                 # (5,) metric partials (kernels.collage_update.ops), the
@@ -281,12 +410,13 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                 # definitionally exact, no hand-maintained inverse of the
                 # finalize step
                 new_params, new_opt, parts = opt.step_bucketed(
-                    gdata, params, opt_state, metrics_partials=True)
+                    gdata, params, opt_state, metrics_partials=True,
+                    elem_offsets=offs)
                 om = kops.finalize_metrics(jax.lax.psum(parts, axis),
                                            params.layout.total_size)
             else:
-                new_params, new_opt, om = opt.step_bucketed(gdata, params,
-                                                            opt_state)
+                new_params, new_opt, om = opt.step_bucketed(
+                    gdata, params, opt_state, elem_offsets=offs)
         else:
             if dtype is not None:
                 # residual leaves carry a per-device dim: strip this
@@ -315,9 +445,7 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
         group = cfg.decoder_program()[0]
 
         def stage_body(stage_params, h):
-            out, _aux = tf.group_apply(stage_params, h, group, cfg,
-                                       remat=remat)
-            return out
+            return tf.group_apply(stage_params, h, group, cfg, remat=remat)
 
         # Body vs head grads are separated by differentiating two aliases
         # of the same params: the body path (embedding lookup + stage
@@ -331,17 +459,34 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
         # lookup's).
         def loss_fn(p_body, p_head, chunks):
             x = embed_lookup(p_body["embed"], chunks["tokens"])
-            out = pp.stage_schedule(stage_body,
-                                    p_body["decoder"]["groups"][0],
-                                    x, axis=pipeline_axis, n_stages=S)
+            n_micro = chunks["tokens"].shape[0]
+            out, aux = pp.stage_schedule(stage_body,
+                                         p_body["decoder"]["groups"][0],
+                                         x, axis=pipeline_axis, n_stages=S,
+                                         with_aux=True)
+            # aux arrives summed over every stage's layers and every real
+            # microbatch (bubble ticks masked out inside the schedule);
+            # /n_micro matches the unpipelined accum's per-chunk average
+            aux = aux / n_micro
             logits = model._head(p_head, out)     # (n, mb, L, V) fp32
             ce = model.token_ce(logits, chunks["labels"])
-            return ce, {"ce": ce, "aux": jnp.zeros((), ACC)}
+            return ce + AUX_LOSS_COEF * aux, {"ce": ce, "aux": aux}
 
         (loss, lmetrics), (g_body, g_head) = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(params, params, batch)
 
+        inv_S = jnp.float32(1.0 / S)
+
         def fix_body(path, g):
+            # the schedule's closing psum transposes to psum under
+            # check_rep=False: every stage's (identical) loss cotangent
+            # into `out` is SUMMED on the way back, so every body-path
+            # gradient arrives S-fold. Rescale to the true gradient —
+            # exact for power-of-two stage counts. The old engine shipped
+            # the S× scale silently: Adam's per-element scale invariance
+            # hid it from the params-parity tests, but ‖g‖²-based
+            # StepMetrics (and any non-scale-invariant consumer) see it.
+            g = (g.astype(jnp.float32) * inv_S).astype(g.dtype)
             if _in_groups(path):
                 return g                          # stage-local chunk
             # embedding lookup: only stage 0 feeds activations in → psum
@@ -358,13 +503,48 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                           + b.astype(jnp.float32)).astype(a.dtype),
             jax.tree_util.tree_map_with_path(fix_body, g_body),
             jax.tree_util.tree_map(fix_head, g_head))
-        grads = jax.tree_util.tree_map(lambda g: pmean32(g, axis), grads)
+        grad_err = state.grad_err
+        if dtype is not None:
+            # dp reduction at (leaf class × dtype) bucket granularity: ONE
+            # compressed all-reduce per bucket (stage chunks / embed / head)
+            grads, new_rows = _compress_pipeline_grads(
+                grads, grad_err if use_ef else None, dtype, axis, n_dp)
+            if use_ef:
+                grad_err = new_rows
+        else:
+            grads = jax.tree_util.tree_map(lambda g: pmean32(g, axis), grads)
         loss = jax.lax.pmean(loss, axis)
         lmetrics = {k: jax.lax.pmean(lmetrics[k], axis)
                     for k in ("ce", "aux")}
-        new_params, new_opt, _ = opt.step(grads, params, state.opt_state)
-        return (train_loop.TrainState(new_params, new_opt, None),
-                _metric_dict(loss, lmetrics, _zero_step_metrics()))
+        if opt.compute_metrics:
+            # real StepMetrics: raw per-leaf partials, stage-local leaves
+            # psum'd over the pipeline axis (disjoint chunks sum exactly),
+            # replicated leaves counted once, finalized ONCE — the same
+            # scalar-partials scheme as the ZeRO path
+            new_params, new_opt, parts = opt.step(
+                grads, params, state.opt_state, metrics_partials=True)
+            flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+            zero5 = (jnp.float32(0.0),) * 5
+            stage_tot, shared_tot = zero5, zero5
+            count = 0
+            for (path, leaf), part in zip(flat, parts):
+                if _pipeline_leaf_class(path) == "stage":
+                    stage_tot = tuple(a + p
+                                      for a, p in zip(stage_tot, part))
+                    count += leaf.size * S
+                else:
+                    shared_tot = tuple(a + p
+                                       for a, p in zip(shared_tot, part))
+                    count += leaf.size
+            stage_tot = jax.lax.psum(stage_tot, pipeline_axis)
+            om = kops.finalize_metrics(
+                tuple(a + b for a, b in zip(stage_tot, shared_tot)), count)
+        else:
+            new_params, new_opt, _ = opt.step(grads, params,
+                                              state.opt_state)
+            om = _zero_step_metrics()
+        return (train_loop.TrainState(new_params, new_opt, grad_err),
+                _metric_dict(loss, lmetrics, om))
 
     # ------------------------------------------------------------ wrapper --
     def step(state, batch):
@@ -391,9 +571,8 @@ def _check_pipelinable(model: Model, n_stages: int):
             f"pipeline mode needs a uniform single-group decoder stack, "
             f"got {len(prog)} groups")
     group = prog[0]
-    if any(s.kind in ("moe", "cross_attn") for s in group.period):
-        raise ValueError("pipeline mode: MoE/cross-attn groups unsupported "
-                         "(aux losses don't ride the stage schedule)")
+    if any(s.kind == "cross_attn" for s in group.period):
+        raise ValueError("pipeline mode: cross-attn groups unsupported")
     if group.repeats % n_stages:
         raise ValueError(
             f"decoder depth {group.repeats} not divisible by "

@@ -26,14 +26,13 @@ Two parameter layouts are supported transparently (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bucketing
-from repro.core.collage import CollageAdamW, CollageOptState, StepMetrics
+from repro.core.collage import CollageAdamW
 from repro.distributed import compression
 from repro.models.model import Model
 
@@ -71,7 +70,10 @@ def init_state(model: Model, opt: CollageAdamW, key,
     are layout-independent of the axis size. The residual template is built
     from the GRADIENT structure — identical to params for the tree layout,
     the flat bucket tuple for the bucketed layout (where a params-shaped
-    template would miss the bucket granularity and pick the wrong dtype)."""
+    template would miss the bucket granularity and pick the wrong dtype).
+    Pipeline-mode engines replace the tree residual with the per-leaf-class
+    flat-bucket dict of ``sharded.pipeline_error_state`` (built by
+    ``sharded.init_state(pipeline_axis=...)``)."""
     params = model.init(key)
     if opt.policy.bucketing.enabled:
         params, opt_state = opt.init_bucketed(params)

@@ -1,0 +1,134 @@
+"""The CI benchmark-regression gate (benchmarks/check_regression.py) must
+(a) pass on the committed baselines verbatim and (b) DEMONSTRABLY fail on
+doctored artifacts — a gate that can't fail is decoration, not CI.
+
+Each doctoring below reintroduces a specific regression a prior PR's bench
+claim forbids: an O(L²) score buffer, a per-leaf collective storm, an f32
+wire dtype on a compressed path, steady-state concats in the bucketed
+optimizer step, a growing decode temp arena."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks import check_regression as cr  # noqa: E402
+
+BASE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def _load(name):
+    with open(os.path.join(BASE_DIR, name)) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(cr.CHECKS))
+def test_baseline_passes_itself(name):
+    base = _load(name)
+    assert cr.CHECKS[name](copy.deepcopy(base), base) == []
+
+
+def test_repo_artifacts_pass_baselines():
+    """Locally-generated BENCH_*.json at the repo root are the artifacts
+    the baselines were cut from — the gate must accept them end to end
+    (CLI path included). On a fresh checkout the artifacts don't exist
+    (gitignored); CI generates them in the bench jobs and gates there."""
+    paths = [os.path.join(REPO, n) for n in sorted(cr.CHECKS)
+             if os.path.exists(os.path.join(REPO, n))]
+    if not paths:
+        pytest.skip("no locally generated BENCH_*.json (fresh checkout)")
+    assert cr.main(paths + ["--baseline-dir", BASE_DIR]) == 0
+
+
+class TestDoctoredArtifactsFail:
+    def test_quadratic_buffer_fails(self):
+        base = _load("BENCH_attention.json")
+        cur = copy.deepcopy(base)
+        cur["flash_quadratic_buffers"] = ["tensor<4096x4096xf32>"]
+        v = cr.check_attention(cur, base)
+        assert v and "quadratic" in v[0], v
+
+    def test_toothless_detector_fails(self):
+        base = _load("BENCH_attention.json")
+        cur = copy.deepcopy(base)
+        cur["masked_quadratic_buffers"] = []
+        assert any("teeth" in x for x in cr.check_attention(cur, base))
+
+    def test_regressed_ok_claim_fails(self):
+        base = _load("BENCH_attention.json")
+        cur = copy.deepcopy(base)
+        cur["ok"]["flash_step_has_no_quadratic_buffer"] = False
+        assert any("ok-claim" in x for x in cr.check_attention(cur, base))
+
+    def test_collective_count_regression_fails(self):
+        base = _load("BENCH_train_step.json")
+        cur = copy.deepcopy(base)
+        c = cur["census"]["bucket_bf16_ef"]
+        c["grad_ops"] = base["census"]["leafwise_bf16_ef"]["grad_ops"]
+        assert any("collective-count" in x
+                   for x in cr.check_train_step(cur, base))
+
+    def test_f32_wire_dtype_regression_fails(self):
+        """A compressed config whose collective census suddenly contains an
+        f32 all_reduce (the payload silently upcast) must fail."""
+        base = _load("BENCH_train_step.json")
+        cur = copy.deepcopy(base)
+        c = cur["census"]["bucket_bf16_ef"]
+        c["grad_ops_by_dtype"] = {"all_reduce:f32": 1}
+        assert any("dtype" in x for x in cr.check_train_step(cur, base))
+
+    def test_wire_bytes_regression_fails(self):
+        base = _load("BENCH_train_step.json")
+        cur = copy.deepcopy(base)
+        cur["census"]["bucket_fp8_ef"]["staged_wire_bytes"] *= 4
+        assert any("wire bytes" in x
+                   for x in cr.check_train_step(cur, base))
+
+    def test_steady_state_concat_regression_fails(self):
+        base = _load("BENCH_optimizer_step.json")
+        cur = copy.deepcopy(base)
+        cur["results"][0]["bucketed"]["prims"]["concatenate"] = 7
+        assert any("concat-free" in x
+                   for x in cr.check_optimizer_step(cur, base))
+
+    def test_compile_size_regression_fails(self):
+        base = _load("BENCH_optimizer_step.json")
+        cur = copy.deepcopy(base)
+        cur["results"][-1]["bucketed"]["eqns"] *= 10
+        assert any("compile-size" in x
+                   for x in cr.check_optimizer_step(cur, base))
+
+    def test_decode_arena_growth_fails(self):
+        base = _load("BENCH_decode.json")
+        cur = copy.deepcopy(base)
+        cur["temp_bytes_long"] = int(cur["temp_bytes_short"] * 10)
+        assert any("realloc" in x for x in cr.check_decode(cur, base))
+
+    def test_decode_uniform_blowup_fails(self):
+        """A UNIFORM arena/cache inflation keeps both self-consistency
+        checks true — only the baseline-relative bound catches it."""
+        base = _load("BENCH_decode.json")
+        cur = copy.deepcopy(base)
+        for k in ("temp_bytes_short", "temp_bytes_long", "cache_bytes"):
+            cur[k] = int(cur[k] * 10)
+        cur["donated_step"]["alias_bytes"] = \
+            int(cur["donated_step"]["alias_bytes"] * 10)
+        v = cr.check_decode(cur, base)
+        assert any("baseline" in x for x in v), v
+
+    def test_missing_baseline_fails_cli(self, tmp_path):
+        art = tmp_path / "BENCH_train_step.json"
+        art.write_text(json.dumps(_load("BENCH_train_step.json")))
+        assert cr.main([str(art), "--baseline-dir",
+                        str(tmp_path / "nowhere")]) == 1
+
+    def test_doctored_artifact_fails_cli(self, tmp_path):
+        cur = _load("BENCH_attention.json")
+        cur["flash_quadratic_buffers"] = ["f32[4096,4096]"]
+        art = tmp_path / "BENCH_attention.json"
+        art.write_text(json.dumps(cur))
+        assert cr.main([str(art), "--baseline-dir", BASE_DIR]) == 1

@@ -147,6 +147,130 @@ class TestSupervisor:
                                       np.full((4,), sum(range(10)), np.float32))
 
 
+class TestPipelineResidualElasticity:
+    """Checkpoint elasticity for the PIPELINE-mode EF residual layout
+    (PR 5): ``TrainState.grad_err`` is a dict of per-(leaf-class × dtype)
+    flat buckets whose leading dim is the stage·dp device index AND whose
+    bucket LENGTH is per-stage — so a stage-count rescale changes both
+    dims. Restore must zero-fill (one step of compression error), never
+    fail the shape check; a same-layout restore must keep the rows."""
+
+    def _pipeline_state(self, model, opt, S, n_dp):
+        from repro.train import sharded
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        rows = sharded.pipeline_error_state(params, S, n_dp, jnp.bfloat16)
+        # nonzero residuals so "preserved" and "zero-filled" are distinct
+        rows = {k: (v + jnp.arange(v.shape[0], dtype=v.dtype)[:, None]
+                    * jnp.asarray(0.125, v.dtype)) + jnp.asarray(0.25, v.dtype)
+                for k, v in rows.items()}
+        return train_loop.TrainState(params, opt_state, rows)
+
+    def _mk(self):
+        cfg = get_config("gpt-tiny", smoke=True)
+        model = build_model(cfg)
+        opt = CollageAdamW(1e-3, b2=0.95, policy=PrecisionPolicy(
+            strategy=Strategy.C_COLLAGE_PLUS))
+        return model, opt
+
+    def test_same_layout_round_trip_keeps_rows(self, tmp_path):
+        model, opt = self._mk()
+        state = self._pipeline_state(model, opt, S=2, n_dp=2)
+        ckpt = str(tmp_path / "ckpt")
+        ckpt_lib.save(ckpt, 1, state, extra={"step": 1})
+        restored, _ = ckpt_lib.restore_bucketed(ckpt, 1, state)
+        _leaves_equal(state, restored)
+
+    @pytest.mark.parametrize("new_S,new_dp", [(1, 2), (2, 4), (1, 4),
+                                              (2, 1)])
+    def test_zero_fills_across_stage_and_dp_changes(self, tmp_path,
+                                                    new_S, new_dp):
+        model, opt = self._mk()
+        state = self._pipeline_state(model, opt, S=2, n_dp=2)
+        ckpt = str(tmp_path / "ckpt")
+        ckpt_lib.save(ckpt, 1, state, extra={"step": 1})
+        template = self._pipeline_state(model, opt, S=new_S, n_dp=new_dp)
+        restored, _ = ckpt_lib.restore_bucketed(ckpt, 1, template)
+        # params / optimizer state restore bit-exactly regardless
+        _leaves_equal(state.params, restored.params)
+        for k, row in restored.grad_err.items():
+            assert row.shape == template.grad_err[k].shape, k
+            if row.shape == state.grad_err[k].shape:
+                np.testing.assert_array_equal(
+                    np.asarray(row, np.float32),
+                    np.asarray(state.grad_err[k], np.float32))
+            else:   # relaid-out rows zero-fill — bounded O(ulp) carry lost
+                assert np.abs(np.asarray(row, np.float32)).max() == 0, k
+
+    def test_restore_across_residual_layout_classes(self, tmp_path):
+        """grad_err may change LAYOUT CLASS across resumes — pipeline
+        bucket dict ↔ per-leaf tree ↔ absent (dp/stage rescale, pipeline
+        on/off, compression toggle). Restore matches by name: template
+        grad_err leaves with no stored counterpart zero-fill, stored ones
+        the template lacks drop, everything else restores bit-exactly.
+        A non-grad_err structure mismatch must still fail hard."""
+        model, opt = self._mk()
+        state = self._pipeline_state(model, opt, S=2, n_dp=2)
+        ckpt = str(tmp_path / "ckpt")
+        ckpt_lib.save(ckpt, 1, state, extra={"step": 1})
+        # pipeline dict → per-leaf tree (left pipeline mode, dp EF rows)
+        tree_err = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((4,) + p.shape, jnp.float32), state.params)
+        template = train_loop.TrainState(state.params, state.opt_state,
+                                         tree_err)
+        restored, _ = ckpt_lib.restore_bucketed(ckpt, 1, template)
+        _leaves_equal(state.params, restored.params)
+        for leaf in jax.tree_util.tree_leaves(restored.grad_err):
+            assert np.abs(np.asarray(leaf, np.float32)).max() == 0
+        # pipeline dict → absent (compression switched off)
+        template = train_loop.TrainState(state.params, state.opt_state,
+                                         None)
+        restored, _ = ckpt_lib.restore_bucketed(ckpt, 1, template)
+        assert restored.grad_err is None
+        _leaves_equal(state.params, restored.params)
+        # a PARAMS structure mismatch is still a hard error
+        bad_params = dict(state.params)
+        bad_params["rogue"] = jnp.zeros((4,), jnp.float32)
+        template = train_loop.TrainState(bad_params, state.opt_state, None)
+        with pytest.raises(AssertionError, match="structure mismatch"):
+            ckpt_lib.restore_bucketed(ckpt, 1, template)
+
+    def test_supervisor_recovers_pipeline_layout_state(self, tmp_path):
+        """Crash-recovery through the supervisor with the (stage·dp)-row
+        grad_err dict in flight: the restore path must hand back the dict
+        structure intact, and the straggler p99 window must stay sane when
+        the recovery's restore cost lands in the step-time samples."""
+        model, opt = self._mk()
+        state = self._pipeline_state(model, opt, S=2, n_dp=2)
+        crashes = {"armed": True}
+
+        def fault(step_i):
+            if step_i == 3 and crashes["armed"]:
+                crashes["armed"] = False
+                raise RuntimeError("simulated stage-host failure")
+
+        def fake_step(s, batch):
+            err = {k: v + jnp.asarray(0.5, v.dtype)
+                   for k, v in s.grad_err.items()}
+            return train_loop.TrainState(s.params, s.opt_state, err), \
+                {"loss": 0.0}
+
+        sup = RunSupervisor(SupervisorConfig(str(tmp_path / "c"),
+                                             ckpt_every=2),
+                            fault_hook=fault)
+        final, step_i, _ = sup.run(state, fake_step,
+                                   lambda i: jnp.float32(i), n_steps=6)
+        assert step_i == 6 and sup.recoveries == [3]
+        assert set(final.grad_err) == set(state.grad_err)
+        for k, v in final.grad_err.items():
+            assert v.shape == state.grad_err[k].shape, k
+        # the p99 window holds one sample per completed step EXECUTION:
+        # steps 0,1,2 + the crashed attempt at 3 (no sample) + the re-run
+        # of 2,3 after restoring ckpt@2 + 4,5 → 7 samples, never the
+        # crashed attempt itself
+        assert len(sup.step_times) == 7
+
+
 class TestElasticRestore:
     def test_restore_across_mesh_shapes(self, setup):
         """Save unsharded, restore into a resharded template (device_put with

@@ -7,7 +7,6 @@ import pytest
 
 from repro.core.collage import CollageAdamW
 from repro.core.precision import PrecisionPolicy, Strategy
-from repro.kernels.collage_update import ops as cu_ops
 from repro.kernels.collage_update.collage_update import collage_update
 from repro.kernels.collage_update.ref import collage_update_ref
 from repro.kernels.edq.edq import edq_metrics

@@ -3,7 +3,6 @@
 labeled the total loss — incl. 0.01·aux — as "ce", zeroed "aux", and
 derived "ppl" from the total, which is wrong for MoE configs)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
