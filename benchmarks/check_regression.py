@@ -22,7 +22,15 @@ contract:
                       leaf count, a regression reintroduces O(leaves));
   BENCH_decode        flat temp arena across generation lengths (zero
                       per-step cache realloc), donated-step alias bytes
-                      covering the cache.
+                      covering the cache;
+  BENCH_precision_audit  the no-master-copy invariant per (config ×
+                      strategy × mode) cell (zero parameter-shaped f32
+                      live across steps for 16-bit strategies, the D
+                      baseline must keep flagging its master copy),
+                      donation realization, transient-f32/double-round
+                      structural counts, modeled state/peak-HBM/step-time
+                      sizes, collage-vs-mixed memory-gap ratios, and a
+                      clean source lint.
 
 Wall-clock numbers are deliberately NOT gated — they are machine noise on
 CI runners; every gated metric is a property of the lowered/compiled IR or
@@ -163,8 +171,62 @@ def check_decode(cur: dict, base: dict) -> list:
     return out
 
 
+def check_precision_audit(cur: dict, base: dict) -> list:
+    """Static-audit artifact (scripts/precision_audit.py). Everything gated
+    here is a property of the lowered IR: the no-master-copy invariant and
+    donation realization are zero-tolerance; state/peak-HBM/modeled-step
+    sizes get SIZE_TOL headroom; the strict-FPU transient-f32 and
+    double-round counts are structural per lowering, so any growth over
+    baseline is a new promotion site."""
+    out: list = []
+    for key, b in base.get("cells", {}).items():
+        c = cur.get("cells", {}).get(key)
+        if c is None:
+            out.append(f"audit cell '{key}' missing from current artifact "
+                       f"— the invariant is no longer being checked there")
+            continue
+        if b["sixteen_bit"]:
+            _viol(out, c["n_param_f32_persistent"] == 0,
+                  f"{key}: {c['n_param_f32_persistent']} parameter-shaped "
+                  f"f32 buffers live across steps "
+                  f"{c['param_f32_persistent'][:4]} — an fp32 master copy "
+                  f"in a (16,16) strategy")
+        else:
+            _viol(out, c["n_param_f32_persistent"] > 0,
+                  f"{key}: mixed-precision baseline reports NO master copy "
+                  f"— the detector lost its teeth")
+        _viol(out, c["n_unrealized"] == 0,
+              f"{key}: {c['n_unrealized']} donated buffers not aliased in "
+              f"the compiled executable (donation broke)")
+        for count in ("transient_param_shaped_f32", "double_round_chains"):
+            _viol(out, c[count] <= b[count],
+                  f"{key}: {count} {c[count]} > baseline {b[count]} — a "
+                  f"new f32 promotion/round-trip site in the lowering")
+        for size in ("state_bytes", "peak_bytes_tpu", "modeled_step_s"):
+            _viol(out, c[size] <= b[size] * SIZE_TOL,
+                  f"{key}: {size} {c[size]} > baseline "
+                  f"{b[size]}×{SIZE_TOL}")
+    for arch, b in base.get("memory_gap", {}).items():
+        c = cur.get("memory_gap", {}).get(arch)
+        if c is None:
+            out.append(f"memory_gap '{arch}' missing from current artifact")
+            continue
+        for ratio in ("state_ratio", "peak_ratio"):
+            _viol(out, c[ratio] <= b[ratio] * SIZE_TOL,
+                  f"memory_gap/{arch}: {ratio} {c[ratio]} > baseline "
+                  f"{b[ratio]}×{SIZE_TOL} — the collage-vs-mixed memory "
+                  f"advantage shrank")
+    _viol(out, cur.get("source_lint", {}).get("n_findings", 99) == 0,
+          f"source lint: {cur.get('source_lint', {}).get('n_findings')} "
+          f"un-annotated f32 promotion sites in models/ or core/: "
+          f"{cur.get('source_lint', {}).get('findings', [])[:4]}")
+    _check_ok_flags(cur, base, out, "precision_audit")
+    return out
+
+
 CHECKS = {
     "BENCH_train_step.json": check_train_step,
+    "BENCH_precision_audit.json": check_precision_audit,
     "BENCH_attention.json": check_attention,
     "BENCH_optimizer_step.json": check_optimizer_step,
     "BENCH_decode.json": check_decode,

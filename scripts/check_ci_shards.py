@@ -64,6 +64,19 @@ def slow_selecting_invocations(yml: str) -> list:
     return out
 
 
+def regression_gated_artifacts(yml: str) -> set:
+    """BENCH_*.json names passed to benchmarks.check_regression anywhere in
+    the workflow. Backslash-continued lines are joined first, same as for
+    the slow-invocation scan."""
+    yml = re.sub(r"\\\s*\n\s*", " ", yml)
+    gated: set = set()
+    for line in yml.splitlines():
+        if "check_regression" not in line or re.search(r"^\s*#", line):
+            continue
+        gated.update(re.findall(r"(BENCH_\w+\.json)", line))
+    return gated
+
+
 def slow_marked_files(tests_dir: pathlib.Path) -> set:
     out = set()
     for p in sorted(tests_dir.glob("test_*.py")):
@@ -109,13 +122,24 @@ def main(argv=None) -> int:
                     f"tier-1 deselects slow (pytest.ini) and every "
                     f"'-m slow' invocation names other files")
 
+    # every committed baseline must be gated by some job: a baseline whose
+    # artifact no job regenerates + diffs is a claim nobody enforces
+    baselines = {p.name for p in
+                 pathlib.Path("benchmarks/baselines").glob("BENCH_*.json")}
+    gated = regression_gated_artifacts(yml)
+    ungated = baselines - gated
+    if ungated:
+        errors.append(f"committed baselines gated by NO check_regression "
+                      f"invocation in the workflow: {sorted(ungated)}")
+
     if errors:
         for e in errors:
             print(f"FAIL {e}")
         return 1
     print(f"CI matrix OK: {len(actual)} test files sharded, "
           f"slow tests in {len(slow_files)} files all selected "
-          f"({len(invocations)} '-m slow' invocation(s))")
+          f"({len(invocations)} '-m slow' invocation(s)), "
+          f"{len(baselines)} baseline(s) all regression-gated")
     return 0
 
 

@@ -1,0 +1,29 @@
+"""Static-analysis subsystem over lowered/compiled IR (DESIGN.md §8).
+
+Four passes + a source lint, all pure text analysis (no jax import):
+
+  hlo            — compiled-HLO parser, scan-aware FLOPs/HBM/collective
+                   costs, header parsers (aliasing, entry layout),
+                   StableHLO collective census, quadratic-buffer detector
+  stablehlo      — SSA parser for the lowered StableHLO (args/results
+                   with jax metadata, ops with operand/result dtypes)
+  precision_flow — the no-master-copy invariant + double-rounding /
+                   promotion tracking
+  donation       — donate_argnums intent vs realized input-output aliasing
+  liveness       — modeled peak-HBM from def/last-use intervals
+  cost_model     — per-op roofline latency + critical-path modeled step time
+  source_lint    — AST lint for f32 promotion hazards in hot paths
+  audit          — per-cell orchestration of the IR passes
+
+``repro.utils.hlo_analysis`` remains as a compat shim over ``hlo``.
+"""
+from repro.analysis import hlo  # noqa: F401
+from repro.analysis.audit import audit_cell, is_sixteen_bit  # noqa: F401
+from repro.analysis.cost_model import model_step  # noqa: F401
+from repro.analysis.donation import (  # noqa: F401
+    assert_donation_realized, check_donation)
+from repro.analysis.liveness import peak_hbm  # noqa: F401
+from repro.analysis.precision_flow import (  # noqa: F401
+    analyze_precision_flow, assert_no_master_copy)
+from repro.analysis.source_lint import lint_file, lint_paths  # noqa: F401
+from repro.analysis.stablehlo import main_func, parse_stablehlo  # noqa: F401

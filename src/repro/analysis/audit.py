@@ -1,0 +1,45 @@
+"""Audit orchestration: run all four IR passes over one lowered cell.
+
+Pure text-in/dict-out — the caller (scripts/precision_audit.py, tests)
+owns jax, meshes and compilation; this layer never imports jax, so the
+same audit runs on stored IR artifacts (dryrun's .hlo.zst cache) as on a
+fresh lowering.
+"""
+from __future__ import annotations
+
+from repro.analysis.cost_model import model_step
+from repro.analysis.donation import check_donation
+from repro.analysis.liveness import peak_hbm
+from repro.analysis.precision_flow import analyze_precision_flow
+
+# every strategy except D (the deliberate fp32-master-weights baseline)
+# claims the Collage (16,16) no-master-copy property
+MASTER_COPY_STRATEGIES = ("D",)
+
+
+def is_sixteen_bit(strategy: str) -> bool:
+    return strategy not in MASTER_COPY_STRATEGIES
+
+
+def audit_cell(stablehlo_text: str, compiled_text: str, *, strategy: str,
+               hw: dict | None = None, min_numel: int = 65,
+               allow_names: tuple = ()) -> dict:
+    """Full static audit of one (config × strategy × mode) cell."""
+    pf = analyze_precision_flow(
+        stablehlo_text, sixteen_bit=is_sixteen_bit(strategy),
+        min_numel=min_numel, allow_names=allow_names)
+    don = check_donation(stablehlo_text, compiled_text)
+    live = peak_hbm(compiled_text)
+    cost = model_step(compiled_text, hw)
+    return {
+        "strategy": strategy,
+        "precision_flow": pf,
+        "donation": don,
+        "liveness": live,
+        "cost": cost,
+        "ok": {
+            # the invariant (16-bit cells) / its deliberate violation (D)
+            "no_master_copy": pf["no_master_copy"],
+            "all_donations_realized": don["all_donations_realized"],
+        },
+    }

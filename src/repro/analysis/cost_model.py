@@ -1,0 +1,152 @@
+"""Per-op cost + critical-path walk: modeled step time from the compiled IR.
+
+Each scheduled op gets a roofline latency
+
+    t(op) = max(flops / peak_flops, hbm_bytes / hbm_bw, wire_bytes / ici_bw)
+
+and the step's critical path is the longest def-use chain through the
+(SSA ⇒ already topologically ordered) entry computation, with ``while``
+bodies contributing trips × their own critical path (the scan-aware
+trip-count machinery from ``analysis.hlo``). Alongside the serial roofline
+terms this bounds modeled step time from two sides:
+
+  * ``serial_*_s``    — every op back-to-back on one unit (no overlap);
+  * ``critical_path_s`` — perfect overlap of independent chains;
+  * ``modeled_step_s`` — max(critical path, each serial resource term):
+    a resource can't go faster than its total demand, a chain can't go
+    faster than its dependencies.
+
+This is the groundwork ROADMAP item 3 (modeled-time CI gate + autotuner)
+builds on: the number is a pure function of the compiled IR, so a schedule
+or partitioning regression moves it deterministically — no wall-clock noise.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo import (_attr, collective_wire_bytes, conv_flops,
+                                dot_flops, entry_computation_name,
+                                group_size, parse_hlo, shape_bytes_tpu,
+                                while_trip_count, _SKIP_BYTES)
+
+# v5p-class chip, mirroring repro.launch.mesh.HW (kept importable without
+# jax: this package analyzes text, it never touches devices)
+DEFAULT_HW = {"peak_flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
+              "hbm_per_chip": 16e9}
+
+
+def _default_hw() -> dict:
+    try:
+        from repro.launch.mesh import HW
+        return dict(HW)
+    except Exception:
+        return dict(DEFAULT_HW)
+
+
+def model_step(compiled_text: str, hw: dict | None = None) -> dict:
+    hw = hw or _default_hw()
+    comps = parse_hlo(compiled_text)
+    entry = entry_computation_name(compiled_text, comps)
+
+    fusion_flops_memo: dict = {}
+
+    def fusion_flops(name: str, stack: tuple) -> float:
+        if name in fusion_flops_memo:
+            return fusion_flops_memo[name]
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += dot_flops(op)
+            elif op.opcode == "convolution":
+                total += conv_flops(op)
+            elif op.opcode == "fusion":
+                callee = _attr(op.attrs, "calls")
+                if callee:
+                    total += fusion_flops(callee, stack + (name,))
+        fusion_flops_memo[name] = total
+        return total
+
+    def op_latency(op, stack: tuple) -> float:
+        flops = 0.0
+        if op.opcode == "dot":
+            flops = dot_flops(op)
+        elif op.opcode == "convolution":
+            flops = conv_flops(op)
+        elif op.opcode == "fusion":
+            callee = _attr(op.attrs, "calls")
+            if callee:
+                flops = fusion_flops(callee, stack)
+        mem = 0.0
+        if op.opcode not in _SKIP_BYTES:
+            mem = shape_bytes_tpu(op.result_type) + \
+                sum(shape_bytes_tpu(t) for t in op.operand_types)
+        wire = 0.0
+        if any(op.opcode.startswith(k) for k in
+               ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")) and not op.opcode.endswith("-done"):
+            payload = sum(shape_bytes_tpu(t) for t in op.operand_types) \
+                or shape_bytes_tpu(op.result_type)
+            wire = collective_wire_bytes(op, payload, group_size(op.attrs))
+        return max(flops / hw["peak_flops_bf16"], mem / hw["hbm_bw"],
+                   wire / hw["ici_bw"])
+
+    cp_memo: dict = {}
+
+    def comp_cp(name: str, stack: tuple) -> float:
+        if name in cp_memo:
+            return cp_memo[name]
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return 0.0
+        stack = stack + (name,)
+        dist: dict = {}
+        best = 0.0
+        for op in comp.ops:
+            t = op_latency(op, stack)
+            if op.opcode == "while":
+                body = _attr(op.attrs, "body")
+                cond = _attr(op.attrs, "condition")
+                trips = while_trip_count(comps[cond]) \
+                    if cond in comps else 1
+                inner = comp_cp(body, stack) if body else 0.0
+                t = trips * (inner + (comp_cp(cond, stack)
+                                      if cond in comps else 0.0))
+            elif op.opcode == "call":
+                callee = _attr(op.attrs, "to_apply") or _attr(op.attrs,
+                                                              "calls")
+                if callee:
+                    t += comp_cp(callee, stack)
+            elif op.opcode == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    b = _attr(op.attrs, key)
+                    if b:
+                        t = max(t, comp_cp(b, stack))
+            d = t
+            for o in op.operand_names:
+                if o in dist and dist[o] + t > d:
+                    d = dist[o] + t
+            dist[op.name] = d
+            best = max(best, d)
+        cp_memo[name] = best
+        return best
+
+    from repro.analysis.hlo import analyze
+    costs = analyze(compiled_text)
+    serial = {
+        "serial_compute_s": costs.flops / hw["peak_flops_bf16"],
+        "serial_memory_s": costs.hbm_bytes_tpu / hw["hbm_bw"],
+        "serial_collective_s":
+            costs.collective_wire_bytes_tpu / hw["ici_bw"],
+    }
+    cp = comp_cp(entry, ())
+    modeled = max(cp, *serial.values())
+    bound = max(serial, key=serial.get) if max(serial.values()) >= cp \
+        else "critical_path"
+    return {
+        "critical_path_s": cp,
+        **serial,
+        "modeled_step_s": modeled,
+        "bound": bound,
+        "parallelism": (sum(serial.values()) / cp) if cp > 0 else 0.0,
+    }

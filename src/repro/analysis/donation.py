@@ -1,0 +1,58 @@
+"""Donation/aliasing checker: donate_argnums intent vs realized aliasing.
+
+``donate_argnums`` is a REQUEST. jax marks the argument in the lowered
+StableHLO (``jax.buffer_donor`` / ``tf.aliasing_output`` attrs), but XLA
+only honors it when a compatible output exists — a dtype/shape mismatch
+(e.g. state returned in a different dtype than it arrived) silently drops
+the alias and the "in-place" update quietly doubles its footprint. The
+realized truth lives in the compiled executable's header:
+
+  input_output_alias={ {out}: (param, {}, may-alias), ... }
+
+This pass cross-references the two: every donated argument must appear as
+an aliased param number in the compiled module. Applies uniformly to the
+train state (params + optimizer moments + EF residuals, donated wholesale
+as argument 0's flattened leaves) and the decode cache arena.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo import entry_layout_types, input_output_aliases
+from repro.analysis.stablehlo import main_func, type_bytes
+
+
+def check_donation(stablehlo_text: str, compiled_text: str) -> dict:
+    main = main_func(stablehlo_text)
+    donated = [a for a in main.args if a.donated]
+    aliases = input_output_aliases(compiled_text)
+    aliased_params = {a["param_number"] for a in aliases}
+    param_types, _ = entry_layout_types(compiled_text)
+
+    unrealized = [{"arg": a.index, "name": a.name, "type": a.type}
+                  for a in donated if a.index not in aliased_params]
+    donated_bytes = sum(type_bytes(a.type) for a in donated)
+    unrealized_bytes = sum(
+        type_bytes(a.type) for a in donated
+        if a.index not in aliased_params)
+
+    return {
+        "n_args": len(main.args),
+        "n_donated": len(donated),
+        "n_aliased": len(aliases),
+        "donated_bytes": donated_bytes,
+        "unrealized": unrealized,
+        "unrealized_bytes": unrealized_bytes,
+        # aliased params that were never marked for donation would mean XLA
+        # aliasing a buffer the caller still owns — flag those too
+        "aliased_without_donation": sorted(
+            aliased_params - {a.index for a in donated}),
+        "n_entry_params": len(param_types),
+        "all_donations_realized": not unrealized,
+    }
+
+
+def assert_donation_realized(report: dict, ctx: str = "") -> None:
+    if not report["all_donations_realized"]:
+        raise AssertionError(
+            f"{ctx}: {len(report['unrealized'])} donated buffer(s) "
+            f"({report['unrealized_bytes']} B) were NOT input-output "
+            f"aliased by XLA: {report['unrealized'][:4]}")

@@ -1,0 +1,125 @@
+"""Buffer-liveness pass: modeled peak-HBM from op def/last-use intervals.
+
+The compiled CPU module is SCHEDULED (``is_scheduled=true``): textual op
+order IS execution order, so a buffer's lifetime is [its op index, the last
+op index that reads it]. Sweeping that interval set gives a peak-residency
+estimate — the number that turns the paper's "Collage saves 15–23% memory"
+claim into a diffable artifact (per config × precision × mesh) instead of a
+citation.
+
+Accounting rules:
+  * entry parameters stay live to the end UNLESS input-output aliased
+    (a donated buffer is rewritten in place, the caller's copy is dead
+    after its last read);
+  * alias-class ops (tuple/gte/bitcast) own no bytes;
+  * fusion internals own no bytes (registers/VMEM — same policy as the
+    cost accounting in ``analysis.hlo``);
+  * a ``while`` contributes its body's peak on top of the buffers live at
+    the loop site (the carried state is counted once as loop operands —
+    a mild overestimate at the loop boundary, symmetric across configs);
+  * bytes are TPU-equivalent (``shape_bytes_tpu``): the CPU backend's f32
+    emulation buffers are clamped to the 2 B/elem they occupy on device.
+
+This is a model, not a measurement — its value is the DIFF (C vs D, flat
+vs ZeRO) and the trend gate, both of which cancel the shared bias.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo import (_attr, entry_computation_name,
+                                input_output_aliases, parse_hlo,
+                                shape_bytes, shape_bytes_tpu)
+
+_NO_BYTES = {"tuple", "get-tuple-element", "bitcast", "bitcast-convert",
+             "after-all", "partition-id", "replica-id", "token"}
+
+
+def peak_hbm(compiled_text: str) -> dict:
+    comps = parse_hlo(compiled_text)
+    entry = entry_computation_name(compiled_text, comps)
+    aliased = {a["param_number"]
+               for a in input_output_aliases(compiled_text)}
+
+    def comp_peak(name: str, is_entry: bool, stack: tuple) -> tuple:
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return 0.0, 0.0
+        stack = stack + (name,)
+        n = len(comp.ops)
+        last_use = {}
+        for i, op in enumerate(comp.ops):
+            for o in op.operand_names:
+                last_use[o] = i
+        sizes = {}
+        for i, op in enumerate(comp.ops):
+            if op.opcode in _NO_BYTES:
+                sizes[op.name] = (0.0, 0.0)
+            else:
+                sizes[op.name] = (float(shape_bytes(op.result_type)),
+                                  float(shape_bytes_tpu(op.result_type)))
+            if op.is_root:
+                last_use[op.name] = n          # outputs survive the call
+            if op.opcode == "parameter":
+                # non-donated entry params belong to the caller for the
+                # whole step; aliased (donated) ones die at last read
+                pnum = int(op.operand_names[0]) \
+                    if op.operand_names and op.operand_names[0].isdigit() \
+                    else -1
+                if is_entry and pnum not in aliased:
+                    last_use[op.name] = n
+        freed_at: dict = {}
+        for o, i in last_use.items():
+            if i < n and o in sizes:
+                freed_at.setdefault(i, []).append(o)
+        live = live_tpu = 0.0
+        peak = peak_tpu = 0.0
+        for i, op in enumerate(comp.ops):
+            inner = inner_tpu = 0.0
+            if op.opcode == "while":
+                body = _attr(op.attrs, "body")
+                if body:
+                    inner, inner_tpu = comp_peak(body, False, stack)
+            elif op.opcode == "call":
+                callee = _attr(op.attrs, "to_apply") or _attr(op.attrs,
+                                                              "calls")
+                if callee:
+                    inner, inner_tpu = comp_peak(callee, False, stack)
+            elif op.opcode == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    b = _attr(op.attrs, key)
+                    if b:
+                        bi, bt = comp_peak(b, False, stack)
+                        inner, inner_tpu = max(inner, bi), max(inner_tpu, bt)
+            b, bt = sizes.get(op.name, (0.0, 0.0))
+            live += b
+            live_tpu += bt
+            peak = max(peak, live + inner)
+            peak_tpu = max(peak_tpu, live_tpu + inner_tpu)
+            if op.name in sizes and last_use.get(op.name, -1) <= i:
+                # dead on arrival (never read, not an output)
+                freed_at.setdefault(i, []).append(op.name)
+            for o in freed_at.get(i, ()):
+                sb, sbt = sizes[o]
+                live -= sb
+                live_tpu -= sbt
+        return peak, peak_tpu
+
+    peak, peak_tpu = comp_peak(entry, True, ())
+    param_bytes = param_bytes_tpu = 0.0
+    aliased_bytes = 0.0
+    comp = comps.get(entry)
+    for op in (comp.ops if comp else ()):
+        if op.opcode != "parameter":
+            continue
+        param_bytes += shape_bytes(op.result_type)
+        param_bytes_tpu += shape_bytes_tpu(op.result_type)
+        pnum = int(op.operand_names[0]) \
+            if op.operand_names and op.operand_names[0].isdigit() else -1
+        if pnum in aliased:
+            aliased_bytes += shape_bytes(op.result_type)
+    return {
+        "peak_bytes": peak,
+        "peak_bytes_tpu": peak_tpu,
+        "param_bytes": param_bytes,
+        "param_bytes_tpu": param_bytes_tpu,
+        "aliased_param_bytes": aliased_bytes,
+    }

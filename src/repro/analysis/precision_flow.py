@@ -1,0 +1,170 @@
+"""Precision-flow pass: dtype provenance over the lowered StableHLO.
+
+The no-master-copy invariant, stated on the IR rather than on trust:
+
+  For every (16,16) strategy (everything except D, the fp32-master-weights
+  baseline), NO parameter-shaped f32 buffer may be live ACROSS steps. In a
+  jitted train step, "live across steps" is exactly the main-function result
+  signature — anything not returned dies when the step ends — and jax names
+  every flattened result leaf via ``jax.result_info`` ("[0].params.data[0]",
+  "[0].opt_state.m[0]", …), so the check is: no state-prefixed result is a
+  wide-float tensor above scalar size.
+
+Known-safe exceptions (see DESIGN.md §8): scalar f32 metrics and counters
+(loss, grad-norm, Kahan/step scalars) sit below ``min_numel`` and result
+leaves matching ``allow_names`` are exempt by name.
+
+Two advisory (baseline-gated, not hard-failed) metrics follow the WIDE
+values inside the step:
+
+  * ``transient_param_shaped_f32`` — ops producing a param-shaped f32 value.
+    On the CPU backend the strict-FPU bf16 emulation (convert→f32 → op →
+    reduce_precision e8m7 → convert) makes these BY DESIGN; the count is
+    structural per lowering, so any growth means a new promotion site.
+  * ``double_round_chains`` — convert f32→16 whose value came from a
+    convert 16→f32 through data-movement ops only: the round-trip touched
+    no arithmetic, i.e. a wasted widen/narrow pair.
+"""
+from __future__ import annotations
+
+from repro.analysis.stablehlo import (main_func, parse_stablehlo, tensor_of,
+                                      type_bytes)
+
+NARROW_FLOATS = {"bf16", "f16"}
+WIDE_FLOATS = {"f32", "f64"}
+
+# data-movement opcodes: change layout/extent, never the represented values
+_PASSTHROUGH = {
+    "stablehlo.reshape", "stablehlo.transpose", "stablehlo.broadcast_in_dim",
+    "stablehlo.slice", "stablehlo.dynamic_slice", "stablehlo.concatenate",
+    "stablehlo.reverse", "stablehlo.copy", "stablehlo.optimization_barrier",
+}
+
+_ARITH = {
+    "stablehlo.add", "stablehlo.subtract", "stablehlo.multiply",
+    "stablehlo.divide", "stablehlo.negate", "stablehlo.maximum",
+    "stablehlo.minimum", "stablehlo.abs", "stablehlo.exponential",
+    "stablehlo.sqrt", "stablehlo.rsqrt", "stablehlo.dot_general",
+}
+
+
+def _is_convert(op, src_set, dst_set) -> bool:
+    if op.opcode != "stablehlo.convert":
+        return False
+    if not (op.operand_types and op.result_types):
+        return False
+    src = tensor_of(op.operand_types[0])
+    dst = tensor_of(op.result_types[0])
+    return (src is not None and dst is not None
+            and src[1] in src_set and dst[1] in dst_set)
+
+
+def analyze_precision_flow(stablehlo_text: str, *, sixteen_bit: bool,
+                           min_numel: int = 65,
+                           state_prefix: str = "[0]",
+                           allow_names: tuple = ()) -> dict:
+    """Run the pass over one lowered train step. ``sixteen_bit`` declares
+    whether the strategy CLAIMS the no-master-copy property (C/SR/… yes,
+    D no — for D the same walk reports the master copy instead of failing,
+    which is how the audit proves the detector has teeth)."""
+    funcs = parse_stablehlo(stablehlo_text)
+    main = main_func(stablehlo_text)
+
+    state_results = [r for r in main.results if r.info.startswith(state_prefix)]
+    state_bytes = sum(type_bytes(r.type) for r in state_results)
+
+    persistent_f32 = []
+    f32_state_bytes = 0
+    for r in state_results:
+        t = tensor_of(r.type)
+        if t is None:
+            continue
+        dims, dt = t
+        numel = 1
+        for d in dims:
+            numel *= d
+        if dt in WIDE_FLOATS and numel >= min_numel \
+                and not any(a in r.info for a in allow_names):
+            persistent_f32.append({"name": r.info, "type": r.type})
+            f32_state_bytes += type_bytes(r.type)
+
+    # parameter-shaped = the shape of any large persistent leaf (params and
+    # their optimizer moments share shapes in both flat-bucket and tree
+    # layouts, so this is the master-copy shape class)
+    param_shapes = set()
+    for r in state_results:
+        t = tensor_of(r.type)
+        if t is None:
+            continue
+        dims, _ = t
+        numel = 1
+        for d in dims:
+            numel *= d
+        if numel >= min_numel:
+            param_shapes.add(dims)
+
+    transient = 0
+    transient_samples = []
+    f32_arith_param_shaped = 0
+    widening = narrowing = 0
+    double_round = 0
+    dround_samples = []
+    for fn in funcs.values():
+        defs = fn.op_defs()
+        for op in fn.ops:
+            if _is_convert(op, NARROW_FLOATS, WIDE_FLOATS):
+                widening += 1
+            elif _is_convert(op, WIDE_FLOATS, NARROW_FLOATS):
+                narrowing += 1
+                # walk the producer chain through pure data movement: if it
+                # starts at a widening convert, the round trip was wasted
+                cur = op.operands[0] if op.operands else None
+                for _ in range(32):
+                    prod = defs.get(cur)
+                    if prod is None:
+                        break
+                    if prod.opcode in _PASSTHROUGH and prod.operands:
+                        cur = prod.operands[0]
+                        continue
+                    if _is_convert(prod, NARROW_FLOATS, WIDE_FLOATS):
+                        double_round += 1
+                        if len(dround_samples) < 8:
+                            dround_samples.append(
+                                f"{fn.name}:{prod.name}→{op.name}")
+                    break
+            for rt in op.result_types:
+                t = tensor_of(rt)
+                if t is None:
+                    continue
+                dims, dt = t
+                if dt in WIDE_FLOATS and dims in param_shapes:
+                    transient += 1
+                    if len(transient_samples) < 8:
+                        transient_samples.append(f"{fn.name}:{op.opcode} {rt}")
+                    if op.opcode in _ARITH:
+                        f32_arith_param_shaped += 1
+
+    return {
+        "sixteen_bit": sixteen_bit,
+        "n_state_results": len(state_results),
+        "state_bytes": state_bytes,
+        "param_f32_persistent": persistent_f32,
+        "f32_state_bytes": f32_state_bytes,
+        "transient_param_shaped_f32": transient,
+        "transient_samples": transient_samples,
+        "f32_arith_param_shaped": f32_arith_param_shaped,
+        "double_round_chains": double_round,
+        "double_round_samples": dround_samples,
+        "widening_converts": widening,
+        "narrowing_converts": narrowing,
+        "no_master_copy": not persistent_f32,
+    }
+
+
+def assert_no_master_copy(report: dict, ctx: str = "") -> None:
+    """Hard gate for (16,16) strategies: raises with the offending leaves."""
+    if report["sixteen_bit"] and report["param_f32_persistent"]:
+        leaves = [v["name"] for v in report["param_f32_persistent"]]
+        raise AssertionError(
+            f"{ctx}: fp32 master copy detected — parameter-shaped f32 "
+            f"buffers live across steps: {leaves}")

@@ -1,0 +1,91 @@
+"""AST-level source lint: promotion hazards in the numeric hot paths.
+
+The IR passes prove the COMPILED step is master-copy-free — but an audit
+that only reads IR reports a new ``astype(jnp.float32)`` one lowering too
+late, attached to an opaque HLO op instead of a source line. This lint
+closes the loop at the source level: it walks ``models/`` and ``core/``
+(the code whose tensors are parameter- or activation-shaped) and flags
+
+  * ``naked-astype-f32``   — ``x.astype(jnp.float32)`` / ``.astype("float32")``
+  * ``f32-dtype-arg``      — ``dtype=jnp.float32`` (or ``np.float32`` /
+                             ``"float32"``) passed to any call
+
+Intentional widenings are allowlisted IN PLACE: a ``# f32-ok: <reason>``
+comment on the flagged line (or the line above) documents the exception
+where it lives — strict-FPU emulation scratch, metrics reductions, fp32
+reference oracles. The audit artifact carries the violation list, so a new
+un-annotated promotion fails CI with a file:line, not an HLO diff.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+ALLOW_MARK = "f32-ok"
+DEFAULT_ROOTS = ("src/repro/models", "src/repro/core")
+
+_F32_NAMES = {"float32", "float64"}
+
+
+def _is_f32_node(node) -> bool:
+    if isinstance(node, ast.Attribute):
+        return node.attr in _F32_NAMES
+    if isinstance(node, ast.Constant):
+        return node.value in _F32_NAMES
+    if isinstance(node, ast.Name):
+        return node.id in _F32_NAMES
+    return False
+
+
+def _allowed(lines: list, lineno: int) -> bool:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and ALLOW_MARK in lines[ln - 1]:
+            return True
+    return False
+
+
+def lint_file(path: str) -> list:
+    src = pathlib.Path(path).read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [{"file": path, "line": e.lineno or 0,
+                 "code": "syntax-error", "snippet": str(e)}]
+    out = []
+
+    def add(node, code):
+        if _allowed(lines, node.lineno):
+            return
+        snippet = lines[node.lineno - 1].strip() \
+            if node.lineno <= len(lines) else ""
+        out.append({"file": path, "line": node.lineno, "code": code,
+                    "snippet": snippet[:120]})
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "astype" \
+                and node.args and _is_f32_node(node.args[0]):
+            add(node, "naked-astype-f32")
+        for kw in node.keywords:
+            if kw.arg == "dtype" and _is_f32_node(kw.value):
+                add(node, "f32-dtype-arg")
+    return out
+
+
+def lint_paths(roots=DEFAULT_ROOTS, repo_root: str = ".") -> list:
+    findings = []
+    base = pathlib.Path(repo_root)
+    for root in roots:
+        for p in sorted((base / root).rglob("*.py")):
+            findings.extend(lint_file(str(p)))
+    # stable, repo-relative paths in the artifact
+    for f in findings:
+        try:
+            f["file"] = str(pathlib.Path(f["file"]).resolve()
+                            .relative_to(base.resolve()))
+        except ValueError:
+            pass
+    return findings

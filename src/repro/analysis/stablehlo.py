@@ -1,0 +1,342 @@
+"""Structured parser for jax's LOWERED StableHLO text (``lowered.as_text()``).
+
+The compiled-HLO parser in ``analysis.hlo`` sees the program AFTER the CPU
+backend rewrites it (bf16 arithmetic upcast to f32, collectives widened) —
+fine for cost accounting, useless for precision provenance. The lowered
+StableHLO is the backend-independent statement of what the program SAYS:
+argument/result signatures carry jax's own metadata (``jax.buffer_donor``
+donation intent, ``jax.result_info`` naming each flattened output leaf,
+e.g. ``"[0].opt_state.m[0]"``), and every op records its operand/result
+element types before any backend gets a vote. The precision-flow and
+donation passes parse this.
+
+What this module extracts, line-oriented (the jax printer emits one op per
+line; region ops — all_reduce/reduce/while — close with a ``})``/``cond``
+signature this parser tracks):
+
+  * per-function argument list: name, type, attr dict (donation, sharding);
+  * per-function result list: type + ``jax.result_info`` path;
+  * SSA ops: opcode, operand ids, operand/result types, region depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.analysis.hlo import _DTYPE_BYTES, _STABLE_INT_BYTES, _TENSOR_RE
+
+_ID_RE = re.compile(r"%[A-Za-z_][\w]*|%\d+")
+_FUNC_RE = re.compile(r"func\.func\s+(?:public|private)?\s*@([\w]+)\((.*)$")
+_RESULT_INFO_RE = re.compile(r'jax\.result_info\s*=\s*"([^"]*)"')
+
+_OPEN = {"(": ")", "<": ">", "{": "}", "[": "]"}
+_CLOSE = {v: k for k, v in _OPEN.items()}
+
+
+def _split_top(s: str, sep: str = ",") -> list:
+    """Split on top-level ``sep``, respecting (), <>, {}, [] and quotes."""
+    parts, depth, start, i = [], 0, 0, 0
+    in_str = False
+    while i < len(s):
+        ch = s[i]
+        if in_str:
+            if ch == '"' and s[i - 1] != "\\":
+                in_str = False
+        elif ch == '"':
+            in_str = True
+        elif ch in _OPEN:
+            # `->` arrows: '>' after '-' is not a bracket close; '<' only
+            # opens after an identifier (tensor<, dense<) — treat bare '<'
+            # in compares conservatively as depth (jax never emits those
+            # unbracketed at top level of a signature)
+            depth += 1
+        elif ch in _CLOSE:
+            if ch == ">" and i > 0 and s[i - 1] == "-":
+                pass  # the '->' arrow, not a bracket
+            else:
+                depth -= 1
+        elif ch == sep and depth == 0:
+            parts.append(s[start:i])
+            start = i + 1
+        i += 1
+    parts.append(s[start:])
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _brace_delta(line: str) -> int:
+    """Net {}-depth change of a line, ignoring braces inside strings."""
+    delta, in_str = 0, False
+    for i, ch in enumerate(line):
+        if in_str:
+            if ch == '"' and line[i - 1] != "\\":
+                in_str = False
+        elif ch == '"':
+            in_str = True
+        elif ch == "{":
+            delta += 1
+        elif ch == "}":
+            delta -= 1
+    return delta
+
+
+def tensor_of(type_str: str):
+    """(dims tuple, dtype) of the first tensor<...> in ``type_str``, or
+    ``None``. Scalars (``tensor<f32>``) return ``((), "f32")``."""
+    m = _TENSOR_RE.search(type_str)
+    if not m:
+        return None
+    dims, dt = m.groups()
+    return tuple(int(d) for d in (dims or "").split("x") if d), dt
+
+
+def numel_of(type_str: str) -> int:
+    t = tensor_of(type_str)
+    if t is None:
+        return 0
+    n = 1
+    for d in t[0]:
+        n *= d
+    return n
+
+
+def type_bytes(type_str: str) -> int:
+    """Bytes of one ``tensor<…>`` type (StableHLO dtype spellings: f32,
+    bf16, f8E4M3FN, iN/uiN — mapped through the shared byte tables)."""
+    t = tensor_of(type_str)
+    if t is None:
+        return 0
+    dims, dt = t
+    n = 1
+    for d in dims:
+        n *= d
+    key = dt.lower()
+    return n * _DTYPE_BYTES.get(key, _STABLE_INT_BYTES.get(key, 0))
+
+
+@dataclasses.dataclass
+class SArg:
+    index: int
+    name: str
+    type: str
+    attrs: str
+
+    @property
+    def donated(self) -> bool:
+        """jax donation intent: donate_argnums surfaces as either a
+        ``jax.buffer_donor`` marker or an already-resolved
+        ``tf.aliasing_output`` pairing on the argument."""
+        return ("jax.buffer_donor" in self.attrs
+                or "tf.aliasing_output" in self.attrs)
+
+
+@dataclasses.dataclass
+class SResult:
+    index: int
+    type: str
+    info: str          # jax.result_info path ("" when absent)
+
+
+@dataclasses.dataclass
+class SOp:
+    name: str                  # base SSA id of the (first) result, "%12"
+    arity: int
+    opcode: str
+    operands: list             # base ids (the "#k" result selector stripped)
+    operand_types: list
+    result_types: list
+    depth: int                 # region nesting: 1 = function body
+    line: int
+
+
+@dataclasses.dataclass
+class SFunc:
+    name: str
+    args: list
+    results: list
+    ops: list = dataclasses.field(default_factory=list)
+
+    def op_defs(self) -> dict:
+        """{ssa id: defining SOp}."""
+        return {op.name: op for op in self.ops}
+
+    def op_uses(self) -> dict:
+        """{ssa id: [SOp using it]}."""
+        uses: dict = {}
+        for op in self.ops:
+            for o in op.operands:
+                uses.setdefault(o, []).append(op)
+        return uses
+
+
+def _parse_signature(sig: str):
+    """':'-signature → (operand_types, result_types). ``(a, b) -> c`` forms
+    carry both sides; bare ``t1, t2`` forms type the results only."""
+    sig = sig.strip()
+    arrow = sig.find("->")
+    if arrow >= 0:
+        lhs = sig[:arrow].strip()
+        rhs = sig[arrow + 2:].strip()
+        if lhs.startswith("(") and lhs.endswith(")"):
+            lhs = lhs[1:-1]
+        if rhs.startswith("(") and rhs.endswith(")"):
+            rhs = rhs[1:-1]
+        return _split_top(lhs), _split_top(rhs)
+    return [], _split_top(sig)
+
+
+def _last_top_colon(s: str) -> int:
+    """Index of the last top-level ' : ' separating the op from its type
+    signature (colons inside attr dicts/strings don't count)."""
+    depth, in_str = 0, False
+    last = -1
+    for i, ch in enumerate(s):
+        if in_str:
+            if ch == '"' and s[i - 1] != "\\":
+                in_str = False
+        elif ch == '"':
+            in_str = True
+        elif ch in "({[<":
+            if ch == "<" and i > 0 and not (s[i - 1].isalnum()):
+                continue  # comparison/arrow fragment, not a bracket
+            depth += 1
+        elif ch in ")}]>":
+            if ch == ">" and i > 0 and s[i - 1] == "-":
+                continue
+            depth = max(depth - 1, 0)
+        elif ch == ":" and depth == 0 and s[i - 1:i] == " ":
+            last = i
+    return last
+
+
+_OPCODE_RE = re.compile(r'^(?:"([\w.]+)"|([\w.]+))')
+
+
+def _parse_op_line(line: str, ln: int, depth: int) -> Optional[SOp]:
+    """One SSA op from one line. Returns None for pure structure lines."""
+    m = re.match(r"^(%[\w]+)(?::(\d+))?\s*=\s*(.*)$", line)
+    if m:
+        name, arity, rest = m.group(1), int(m.group(2) or 1), m.group(3)
+    else:
+        # unnamed ops: stablehlo.return / return / custom_call with no result
+        name, arity, rest = "", 0, line
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1) or om.group(2)
+    if opcode in ("func.func", "module"):
+        return None
+    body = rest[om.end():]
+    # while: inline signature sits between ') :' and the 'cond {' keyword
+    if opcode == "stablehlo.while":
+        cond_kw = body.find(" cond")
+        if cond_kw >= 0:
+            body = body[:cond_kw]
+    ci = _last_top_colon(body)
+    operand_part, sig = (body, "") if ci < 0 else (body[:ci], body[ci + 1:])
+    op_types, res_types = _parse_signature(sig) if sig.strip() else ([], [])
+    operands = []
+    for tok in _ID_RE.findall(operand_part):
+        operands.append(tok.split("#")[0])
+    return SOp(name, arity, opcode, operands, op_types, res_types,
+               depth, ln)
+
+
+def _parse_func_header(line: str, ln: int) -> Optional[SFunc]:
+    m = _FUNC_RE.search(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    close = 0
+    depth = 1
+    in_str = False
+    for i, ch in enumerate(rest):
+        if in_str:
+            if ch == '"' and rest[i - 1] != "\\":
+                in_str = False
+        elif ch == '"':
+            in_str = True
+        elif ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                close = i
+                break
+    args = []
+    for i, part in enumerate(_split_top(rest[:close])):
+        am = re.match(r"(%[\w]+):\s*(.*)$", part)
+        if not am:
+            continue
+        typ = am.group(2)
+        attrs = ""
+        brace = typ.find("{")
+        if brace >= 0:
+            attrs = typ[brace:]
+            typ = typ[:brace].strip()
+        args.append(SArg(i, am.group(1), typ, attrs))
+    results = []
+    tail = rest[close + 1:]
+    arrow = tail.find("->")
+    if arrow >= 0:
+        res = tail[arrow + 2:].strip()
+        if res.endswith("{"):
+            res = res[:-1].strip()
+        if res.startswith("(") and res.endswith(")"):
+            res = res[1:-1]
+        for i, part in enumerate(_split_top(res)):
+            im = _RESULT_INFO_RE.search(part)
+            brace = part.find("{")
+            typ = part[:brace].strip() if brace >= 0 else part
+            results.append(SResult(i, typ, im.group(1) if im else ""))
+    return SFunc(name, args, results)
+
+
+def parse_stablehlo(text: str) -> dict:
+    """{func name: SFunc} over a StableHLO module. Region ops whose type
+    signature lands on the closing ``})`` line (all_reduce/reduce/…) are
+    completed when that line arrives."""
+    funcs: dict = {}
+    cur: Optional[SFunc] = None
+    depth = 0
+    pending: list = []          # region ops awaiting their close-signature
+    for ln, raw in enumerate(text.splitlines()):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("func.func"):
+            cur = _parse_func_header(line, ln)
+            depth = _brace_delta(line)
+            pending = []
+            if cur is not None:
+                funcs[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        delta = _brace_delta(line)
+        if line.startswith("}"):
+            # a `}) : (…) -> …` close carries the pending region op's types
+            if pending and " : " in line and "tensor<" in line:
+                op = pending.pop()
+                sig = line[line.find(" : ") + 3:]
+                op.operand_types, op.result_types = _parse_signature(sig)
+            depth += delta
+            if depth <= 0:
+                cur = None
+            continue
+        op = _parse_op_line(line, ln, depth)
+        depth += delta
+        if op is None:
+            continue
+        cur.ops.append(op)
+        if delta > 0 and not op.result_types and op.opcode != "stablehlo.while":
+            pending.append(op)
+    return funcs
+
+
+def main_func(text: str) -> SFunc:
+    funcs = parse_stablehlo(text)
+    if "main" not in funcs:
+        raise ValueError("no @main in StableHLO module "
+                         f"(funcs: {sorted(funcs)})")
+    return funcs["main"]

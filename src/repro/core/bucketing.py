@@ -415,6 +415,7 @@ def stochastic_round_bits(x32: jax.Array, noise16: jax.Array) -> jax.Array:
     mcf.stochastic_round, but with the counter-based noise): add 16 uniform
     bits below the kept mantissa, truncate — carries propagate with exactly
     the right probability, E[SR(x)] = x. Returns on-grid f32."""
+    # f32-ok: SR bit-trick needs the f32 bit pattern; result is re-narrowed
     bits = jax.lax.bitcast_convert_type(x32.astype(jnp.float32), jnp.uint32)
     rounded = (bits + noise16) & jnp.uint32(0xFFFF0000)
     return jax.lax.bitcast_convert_type(rounded, jnp.float32)

@@ -127,6 +127,7 @@ class CollageAdamW:
             delta = zeros(cdt)
         master = None
         if s.uses_master_weights:
+            # f32-ok: strategy D baseline — the master copy IS the point here
             master = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
         rng = jax.random.PRNGKey(self.sr_seed) if s is Strategy.SR else None
         return CollageOptState(step=jnp.zeros((), jnp.int32), m=m, v=v,
@@ -181,8 +182,8 @@ class CollageAdamW:
         s = self.policy.strategy
         cdt = self.policy.param_dtype
         t = state.step + 1
-        tf = t.astype(jnp.float32)
-        # --- scalars in fp32 (App. D rule of thumb) ---
+        tf = t.astype(jnp.float32)  # f32-ok: scalar step counter
+        # --- scalars in fp32 (App. D rule of thumb) --- f32-ok
         lr = self.lr(t).astype(jnp.float32)
         bc1 = 1.0 - jnp.float32(self.b1) ** tf
         bc2 = 1.0 - jnp.float32(self.b2) ** tf
@@ -489,7 +490,7 @@ def cosine_schedule(base_lr: float, warmup: int, total: int,
     """CosineAnnealing with linear warmup (paper §E.2: 200 warmup iters)."""
 
     def f(t):
-        tf = t.astype(jnp.float32)
+        tf = t.astype(jnp.float32)  # f32-ok: scalar schedule argument
         warm = tf / max(warmup, 1)
         prog = jnp.clip((tf - warmup) / max(total - warmup, 1), 0.0, 1.0)
         cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))

@@ -14,7 +14,7 @@ from repro.core.mcf import Expansion, ulp
 
 
 def _f32(x):
-    return x.astype(jnp.float32)
+    return x.astype(jnp.float32)  # f32-ok: EDQ is MEASURED in f32 by definition
 
 
 def effective_update(theta_old: Any, theta_new: Any) -> Any:

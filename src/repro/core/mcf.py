@@ -67,6 +67,7 @@ class StrictFPU:
         return jax.lax.reduce_precision(x32, self.eb, self.mb)
 
     def load(self, x: jax.Array) -> jax.Array:
+        # f32-ok: strict-FPU emulation — every result re-rounds via store()
         return x.astype(jnp.float32)
 
     def store(self, x32: jax.Array) -> jax.Array:
@@ -259,7 +260,7 @@ def from_float(x: float | jax.Array, dtype=jnp.bfloat16,
     E.g. 0.999 → (1.0, −0.000999…) in bf16 — Paper Table 1. The residual is
     computed in f32, exact for the β-like constants in play."""
     f = fpu(dtype)
-    wide = jnp.asarray(x, dtype=jnp.float32)
+    wide = jnp.asarray(x, dtype=jnp.float32)  # f32-ok: exact split scratch
     hi = f.rn(wide)
     lo = f.rn(wide - hi)
     hi = jnp.broadcast_to(f.store(hi), shape)
@@ -272,7 +273,7 @@ def ulp(x: jax.Array) -> jax.Array:
     dt = jnp.dtype(x.dtype)
     p = _SIG_BITS[dt]
     e_min = _EMIN[dt]
-    xf = jnp.abs(x.astype(jnp.float32))
+    xf = jnp.abs(x.astype(jnp.float32))  # f32-ok: exponent extraction scratch
     # Extract the unbiased exponent from the f32 bit pattern (exact — XLA's
     # exp2 is off by an ulp for integer args on some backends).
     bits = jax.lax.bitcast_convert_type(jnp.where(xf > 0, xf, 1.0), jnp.uint32)
@@ -290,6 +291,7 @@ def stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
     propagate with exactly the right probability. Bit ops are opaque to XLA
     so no excess-precision hazard."""
     if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+        # f32-ok: SR bit-trick scratch, re-narrowed to bf16 two lines down
         bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
         noise = jax.random.randint(key, x.shape, 0, 1 << 16, dtype=jnp.uint32)
         rounded = bits + noise
@@ -299,8 +301,9 @@ def stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
     # generic path via ulp arithmetic
     f = fpu(dtype)
     lo = f.rn(x)
+    # f32-ok: ulp arithmetic on the emulated grid runs in the wide carrier
     lo = jnp.where(lo > x, lo - ulp(f.store(lo)).astype(jnp.float32), lo)
-    gap = ulp(f.store(lo)).astype(jnp.float32)
+    gap = ulp(f.store(lo)).astype(jnp.float32)  # f32-ok
     frac = (x - lo) / gap
     up = jax.random.uniform(key, x.shape) < frac
     return f.store(jnp.where(up, lo + gap, lo))

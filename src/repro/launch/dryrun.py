@@ -1,8 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
 # ^ MUST precede any jax-importing import: jax locks the device count on
 # first init. 512 placeholder host devices back both production meshes
 # (16×16 single-pod uses the first 256; 2×16×16 multi-pod uses all 512).
+# setdefault, not assignment: scripts/precision_audit.py pre-sets an
+# 8-device count and drives lower_cell with its own smoke meshes.
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
 record memory/cost/collective analysis for §Dry-run and §Roofline.
@@ -32,6 +35,7 @@ import traceback
 import jax
 
 from repro.configs import ASSIGNED, SHAPES, get_config
+from repro.configs.base import ShapeConfig
 from repro.core.collage import CollageAdamW
 from repro.core.precision import BucketPolicy, PrecisionPolicy, parse_strategy
 from repro.distributed import compression
@@ -50,11 +54,20 @@ for _a in ASSIGNED:
         SKIP[(_a, "long_500k")] = "full-attention arch: long_500k skipped per spec"
 
 
+# smoke-scale shapes for the static-analysis audit (scripts/
+# precision_audit.py): NOT in configs.SHAPES so `--all` sweeps never pick
+# them up — they only exist to keep 8-host-device lowerings CI-sized
+AUDIT_SHAPES = {
+    "train_smoke": ShapeConfig("train_smoke", 128, 32, "train"),
+    "decode_smoke": ShapeConfig("decode_smoke", 256, 8, "decode"),
+}
+
+
 def cell_config(arch: str, shape_name: str, overrides: dict | None = None):
     """Per-cell model-config adjustments (documented in EXPERIMENTS.md).
     ``overrides`` come from §Perf hillclimb variants (see parse_variant)."""
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+    cfg = get_config(arch, smoke=(overrides or {}).get("smoke", "0") == "1")
+    shape = SHAPES.get(shape_name) or AUDIT_SHAPES[shape_name]
     if shape.seq_len >= 8192 and shape.mode != "decode":
         cfg = dataclasses.replace(cfg, attention_impl="flash")
     if cfg.family == "hybrid":
@@ -134,10 +147,14 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
             # axes, ZeRO bucket sharding when bucketed, real compressed
             # gradient collectives (the GSPMD path below can only model
             # the compression locally)
+            pipeline_axis = overrides.get("pipeline") or None
             dp_axes = tuple(a for a in ("pod", "data")
                             if a in mesh.axis_names)
             axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
-            zero = bucketed and isinstance(axis, str)
+            # ZeRO rides the bucketed layout by default; zero=0 keeps the
+            # buckets replicated (the audit's "flat dp" mode)
+            zero = overrides.get("zero", "1" if bucketed else "0") == "1" \
+                and bucketed and isinstance(axis, str)
             n_acc, mb_global = accum_plan(cfg, shape, n_dp)
             if "accum" in overrides:
                 n_acc = int(overrides["accum"])
@@ -145,9 +162,11 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
             state_abs = jax.eval_shape(
                 lambda: sharded_lib.init_state(
                     model, opt, jax.random.PRNGKey(0), mesh, axis=axis,
-                    grad_compression=grad_compression))
+                    grad_compression=grad_compression,
+                    pipeline_axis=pipeline_axis))
             sspecs = sharded_lib.state_pspecs(state_abs, axis=axis,
-                                              zero_shard=zero)
+                                              zero_shard=zero,
+                                              pipeline_axis=pipeline_axis)
             state_sh = sharded_lib.named_shardings(state_abs, sspecs, mesh)
             batch_abs = model.input_specs(shape)
             batch_abs = jax.tree_util.tree_map(
@@ -160,13 +179,14 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
             step = sharded_lib.make_sharded_train_step(
                 model, opt, mesh, axis=axis, remat=remat,
                 grad_compression=grad_compression, zero_shard=zero,
-                jit=False)
+                pipeline_axis=pipeline_axis, jit=False)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                              out_shardings=(state_sh, None),
                              donate_argnums=(0,))
             lowered = jitted.lower(state_abs, batch_abs)
             meta = {"grad_accum": n_acc, "microbatch_global": mb_global,
-                    "engine": "sharded", "zero_shard": zero}
+                    "engine": "sharded", "zero_shard": zero,
+                    "pipeline_axis": pipeline_axis}
         elif shape.mode == "train":
             n_acc, mb_global = accum_plan(cfg, shape, n_dp)
             if "accum" in overrides:

@@ -30,6 +30,7 @@ def mamba_init(key, cfg, dtype):
         "dt_proj": dense_init(ks[3], dt_rank, d_in, dtype),
         "dt_bias": jnp.full((d_in,), -4.6, dtype),   # softplus⁻¹(0.01)
         "A_log": jnp.log(jnp.broadcast_to(
+            # f32-ok: init-time constant, cast to model dtype on the next call
             jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))).astype(dtype),
         "D": jnp.ones((d_in,), dtype),
         "out_proj": dense_init(ks[6], d_in, d, dtype),

@@ -1,530 +1,9 @@
-"""Scan-aware HLO cost analysis: FLOPs / HBM bytes / collective bytes.
-
-Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
-ONCE, so any scan-over-layers model under-reports FLOPs by ~n_layers×
-(verified in tests). This module parses the optimized HLO text
-(``compiled.as_text()``) into a computation call graph, extracts per-while
-trip counts from the loop condition, and aggregates:
-
-  * flops            — 2·M·N·K for every dot (+conv), trip-multiplied;
-  * hbm_bytes        — Σ (operands + outputs) of top-level ops in executed
-                       computations (fusion internals excluded: they live in
-                       registers/VMEM — this matches XLA's fusion cost model);
-  * collective_bytes — per collective kind, with replica-group sizes, plus
-                       ring-adjusted wire-byte estimates.
-
-All HLO shapes are post-SPMD-partitioning ⇒ every number is PER DEVICE.
-Validated against cost_analysis() on scan-free programs (tests).
+"""Compat shim: the HLO analysis toolkit grew into ``repro.analysis``
+(PR 6 — precision-flow/liveness/donation/cost passes live there now).
+Existing importers keep working; new code should import from
+``repro.analysis.hlo`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-import re
-from collections import defaultdict
-from typing import Optional
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
-    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "token": 0,
-    "s4": 1, "u4": 1,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
-                    "all-to-all", "collective-permute")
-
-
-def shape_bytes(type_str: str) -> int:
-    """Total bytes of a (possibly tuple) HLO type string."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-_FLOAT_CLAMP = {"f32": 2, "f64": 2}  # CPU-backend f32 artifacts → bf16 on TPU
-
-
-def shape_bytes_tpu(type_str: str) -> int:
-    """TPU-equivalent bytes: the CPU backend materializes bf16 compute as
-    convert-to-f32 buffers; on TPU those tensors stay bf16 in HBM. Clamp
-    float dtypes to 2 B/elem (ints/bools unchanged)."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _FLOAT_CLAMP.get(dt, _DTYPE_BYTES[dt])
-    return total
-
-
-@dataclasses.dataclass
-class Op:
-    name: str
-    opcode: str
-    result_type: str
-    operand_types: list
-    operand_names: list
-    attrs: str
-    is_root: bool
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    ops: list
-
-    def finalize(self):
-        """Resolve operand types from each operand's defining op (HLO is SSA
-        within a computation; CPU HLO text omits inline operand types)."""
-        types = {op.name: op.result_type for op in self.ops}
-        for op in self.ops:
-            op.operand_types = [
-                t if t else types.get(n, "")
-                for t, n in zip(op.operand_types, op.operand_names)]
-
-
-_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{\s*$")
-_OP_HDR = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
-
-
-def _matching_paren(s: str, start: int) -> int:
-    """Index of the ')' matching s[start] == '('."""
-    depth = 0
-    for i in range(start, len(s)):
-        if s[i] == "(":
-            depth += 1
-        elif s[i] == ")":
-            depth -= 1
-            if depth == 0:
-                return i
-    return len(s) - 1
-
-
-def _split_op_line(rest: str):
-    """rest = everything after '=': returns (type, opcode, operands, attrs).
-    Handles tuple types containing `/*index=N*/` comments and nested parens."""
-    rest = rest.strip()
-    if rest.startswith("("):
-        end = _matching_paren(rest, 0)
-        rtype = rest[:end + 1]
-        tail = rest[end + 1:].strip()
-    else:
-        i = rest.find("(")
-        if i < 0:
-            return None
-        head = rest[:i].strip()
-        if " " not in head:           # e.g. bare `parameter(0)` — no type
-            return None
-        rtype, opcode_tok = head.rsplit(None, 1)
-        tail = opcode_tok + rest[i:]
-    m = re.match(r"^([\w\-\$\.]+)\(", tail)
-    if not m:
-        return None
-    opcode = m.group(1)
-    op_open = m.end() - 1
-    op_close = _matching_paren(tail, op_open)
-    operands = tail[op_open + 1:op_close]
-    attrs = tail[op_close + 1:]
-    return rtype, opcode, operands, attrs
-
-
-def parse_hlo(text: str) -> dict[str, Computation]:
-    comps: dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for line in text.splitlines():
-        if cur is None:
-            m = _COMP_HDR.match(line.strip()) if line.strip().endswith("{") else None
-            if m and ("->" in line):
-                cur = Computation(m.group(1), [])
-            continue
-        if line.strip() == "}":
-            cur.finalize()
-            comps[cur.name] = cur
-            cur = None
-            continue
-        m = _OP_HDR.match(line)
-        if not m:
-            continue
-        root, name = m.groups()
-        split = _split_op_line(line[m.end():])
-        if split is None:
-            continue
-        rtype, opcode, operands, attrs = split
-        op_types, op_names = [], []
-        depth = 0
-        start = 0
-        parts = []
-        for i, ch in enumerate(operands):
-            if ch == "(" or ch == "{":
-                depth += 1
-            elif ch == ")" or ch == "}":
-                depth -= 1
-            elif ch == "," and depth == 0:
-                parts.append(operands[start:i])
-                start = i + 1
-        parts.append(operands[start:])
-        for part in parts:
-            part = part.strip()
-            if not part:
-                continue
-            mm = re.match(r"(.*?)%([\w\.\-]+)$", part)
-            if mm:
-                op_types.append(mm.group(1).strip())
-                op_names.append(mm.group(2))
-            elif re.fullmatch(r"[\w\.\-]+", part):  # bare operand name
-                op_types.append("")
-                op_names.append(part)
-        cur.ops.append(Op(name, opcode, rtype.strip(), op_types, op_names,
-                          attrs, bool(root)))
-    return comps
-
-
-def _attr(attrs: str, key: str) -> Optional[str]:
-    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
-    return m.group(1) if m else None
-
-
-def _dims_attr(attrs: str, key: str) -> list:
-    m = re.search(key + r"={([\d,]*)}", attrs)
-    if not m or not m.group(1):
-        return []
-    return [int(x) for x in m.group(1).split(",")]
-
-
-def _shape_dims(type_str: str) -> list:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(x) for x in m.group(2).split(",") if x]
-
-
-def dot_flops(op: Op) -> float:
-    out = _shape_dims(op.result_type)
-    lhs = _shape_dims(op.operand_types[0]) if op.operand_types else []
-    contract = _dims_attr(op.attrs, "lhs_contracting_dims")
-    k = 1
-    for c in contract:
-        if c < len(lhs):
-            k *= lhs[c]
-    n = 1
-    for d in out:
-        n *= d
-    return 2.0 * n * k
-
-
-def conv_flops(op: Op) -> float:
-    # rough: 2 × output elements × (kernel spatial × in-channels)
-    out = _shape_dims(op.result_type)
-    ker = _shape_dims(op.operand_types[1]) if len(op.operand_types) > 1 else []
-    n = 1
-    for d in out:
-        n *= d
-    k = 1
-    for d in ker[:-1]:
-        k *= d
-    return 2.0 * n * k
-
-
-def group_size(attrs: str, default: int = 1) -> int:
-    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
-    if m:
-        return len(m.group(1).split(","))
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)  # iota v2 form
-    if m:
-        return int(m.group(2))
-    return default
-
-
-def while_trip_count(cond: Computation) -> int:
-    """Extract N from the `compare(iter, N), direction=LT` loop condition.
-
-    CPU HLO wraps the compare in a kLoop fusion, so the constant appears as
-    an operand of the condition's ROOT fusion; check the ROOT's constant
-    operands first, then bare compares, then any constant (fallback)."""
-    consts = {}
-    for op in cond.ops:
-        # `%c = s32[] constant(10)` parses with "10" in operand_names
-        if op.opcode == "constant" and op.operand_names and \
-                re.fullmatch(r"-?\d+", op.operand_names[0]):
-            consts[op.name] = int(op.operand_names[0])
-    for op in cond.ops:
-        if op.is_root and op.opcode in ("fusion", "compare"):
-            vals = [consts[n] for n in op.operand_names if n in consts]
-            if vals:
-                return max(max(vals), 1)
-    for op in cond.ops:
-        if op.opcode == "compare":
-            vals = [consts[n] for n in op.operand_names if n in consts]
-            if vals:
-                return max(max(vals), 1)
-    return max(list(consts.values()) + [1])
-
-
-_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
-               "bitcast", "bitcast-convert", "copy-start", "copy-done",
-               "after-all", "partition-id", "replica-id", "iota"}
-
-
-def _fusion_root_opcode(comps: dict, op: "Op") -> str:
-    callee = _attr(op.attrs, "calls")
-    comp = comps.get(callee)
-    if comp is None:
-        return ""
-    for o in comp.ops:
-        if o.is_root:
-            return o.opcode
-    return ""
-
-
-@dataclasses.dataclass
-class Costs:
-    flops: float = 0.0
-    hbm_bytes: float = 0.0
-    hbm_bytes_tpu: float = 0.0
-    collective_bytes: dict = dataclasses.field(
-        default_factory=lambda: defaultdict(float))
-    collective_wire_bytes: float = 0.0
-    collective_wire_bytes_tpu: float = 0.0
-    collective_counts: dict = dataclasses.field(
-        default_factory=lambda: defaultdict(int))
-    hbm_by_opcode: dict = dataclasses.field(
-        default_factory=lambda: defaultdict(float))
-
-    def add(self, other: "Costs", mult: float = 1.0):
-        self.flops += other.flops * mult
-        self.hbm_bytes += other.hbm_bytes * mult
-        self.hbm_bytes_tpu += other.hbm_bytes_tpu * mult
-        self.collective_wire_bytes += other.collective_wire_bytes * mult
-        self.collective_wire_bytes_tpu += other.collective_wire_bytes_tpu * mult
-        for k, v in other.collective_bytes.items():
-            self.collective_bytes[k] += v * mult
-        for k, v in other.collective_counts.items():
-            self.collective_counts[k] += int(v * mult)
-        for k, v in other.hbm_by_opcode.items():
-            self.hbm_by_opcode[k] += v * mult
-
-    @property
-    def total_collective_bytes(self):
-        return sum(self.collective_bytes.values())
-
-
-def analyze(text: str, entry: Optional[str] = None) -> Costs:
-    comps = parse_hlo(text)
-    # computations called as fusions: exclude from hbm accounting but keep
-    # their dot flops (rare output-fusions)
-    fusion_callees = set()
-    for c in comps.values():
-        for op in c.ops:
-            if op.opcode == "fusion":
-                callee = _attr(op.attrs, "calls")
-                if callee:
-                    fusion_callees.add(callee)
-
-    memo: dict[str, Costs] = {}
-
-    def total(name: str, in_fusion: bool) -> Costs:
-        key = f"{name}|{in_fusion}"
-        if key in memo:
-            return memo[key]
-        c = Costs()
-        comp = comps.get(name)
-        if comp is None:
-            memo[key] = c
-            return c
-        memo[key] = c  # guard simple recursion
-        for op in comp.ops:
-            if op.opcode == "dot":
-                c.flops += dot_flops(op)
-            elif op.opcode == "convolution":
-                c.flops += conv_flops(op)
-            kind = next((k for k in COLLECTIVE_KINDS if op.opcode.startswith(k)),
-                        None)
-            if kind and not op.opcode.endswith("-done"):
-                in_bytes = sum(shape_bytes(t) for t in op.operand_types)
-                in_bytes_tpu = sum(shape_bytes_tpu(t) for t in op.operand_types)
-                if not in_bytes:
-                    in_bytes = shape_bytes(op.result_type)
-                    in_bytes_tpu = shape_bytes_tpu(op.result_type)
-                n = group_size(op.attrs)
-                c.collective_bytes[kind] += in_bytes
-                c.collective_counts[kind] += 1
-                ring = (n - 1) / n if n > 1 else 1.0
-                factor = {"all-reduce": lambda b: 2 * b * ring,
-                          "all-gather": lambda b: b * (n - 1),
-                          "reduce-scatter": lambda b: b * ring,
-                          "all-to-all": lambda b: b * ring,
-                          "collective-permute": lambda b: b}[kind]
-                c.collective_wire_bytes += factor(in_bytes)
-                c.collective_wire_bytes_tpu += factor(in_bytes_tpu)
-            if not in_fusion and op.opcode not in _SKIP_BYTES:
-                out_b = shape_bytes(op.result_type)
-                ops_b = sum(shape_bytes(t) for t in op.operand_types)
-                c.hbm_bytes += out_b + ops_b
-                if op.opcode == "copy":   # TPU fusion/aliasing elides copies
-                    pass
-                elif op.opcode == "dynamic-update-slice" or (
-                        op.opcode == "fusion"
-                        and _fusion_root_opcode(comps, op) ==
-                        "dynamic-update-slice"):
-                    # in-place KV-cache/accumulator update (XLA aliases the
-                    # buffer): traffic = the update slice, not 2× the buffer
-                    big = shape_bytes_tpu(op.result_type)
-                    small = sum(
-                        shape_bytes_tpu(t) for t in op.operand_types
-                        if shape_bytes_tpu(t) != big)
-                    c.hbm_bytes_tpu += small
-                    c.hbm_by_opcode["dus(in-place)"] += small
-                else:
-                    b = shape_bytes_tpu(op.result_type) + \
-                        sum(shape_bytes_tpu(t) for t in op.operand_types)
-                    c.hbm_bytes_tpu += b
-                    c.hbm_by_opcode[op.opcode] += b
-            # recurse into called computations
-            if op.opcode == "while":
-                body = _attr(op.attrs, "body")
-                cond = _attr(op.attrs, "condition")
-                trips = while_trip_count(comps[cond]) if cond in comps else 1
-                if body:
-                    c.add(total(body, in_fusion), mult=trips)
-                if cond in comps:
-                    c.add(total(cond, in_fusion), mult=trips)
-            elif op.opcode == "fusion":
-                callee = _attr(op.attrs, "calls")
-                if callee:
-                    c.add(total(callee, True))
-            elif op.opcode == "conditional":
-                branches = re.findall(r"branch_computations=\{([^}]*)\}",
-                                      op.attrs)
-                names = []
-                if branches:
-                    names = [b.strip().lstrip("%")
-                             for b in branches[0].split(",")]
-                else:
-                    for k in ("true_computation", "false_computation"):
-                        b = _attr(op.attrs, k)
-                        if b:
-                            names.append(b)
-                if names:
-                    branch_costs = [total(b, in_fusion) for b in names]
-                    worst = max(branch_costs, key=lambda x: x.flops)
-                    c.add(worst)
-            elif op.opcode in ("call", "custom-call", "async-start"):
-                callee = _attr(op.attrs, "calls") or _attr(op.attrs, "to_apply")
-                if callee and callee in comps and op.opcode == "call":
-                    c.add(total(callee, in_fusion))
-        memo[key] = c
-        return c
-
-    if entry is None:
-        # ENTRY computation: the one not referenced as callee anywhere — use
-        # text marker instead (robust): line starting with "ENTRY"
-        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
-        entry = m.group(1) if m else next(iter(comps))
-    return total(entry, False)
-
-
-# --------------------------------------------------------------------------
-# StableHLO collective inspection (pre-XLA-optimization IR)
-# --------------------------------------------------------------------------
-#
-# Collective *operand dtype* assertions must run on the LOWERED StableHLO,
-# not the compiled HLO: the CPU backend upcasts bf16/fp8 collectives to f32
-# at optimization time (a backend artifact — on TPU the wire payload stays
-# low-precision as staged). reduce/all_reduce ops carry a reducer region, so
-# the `: (tensor<...>) -> ...` type signature sits on the region-closing
-# `})` line rather than the op line.
-
-_STABLE_COLL_RE = re.compile(
-    r'"stablehlo\.(all_reduce|reduce_scatter|all_gather|'
-    r'collective_permute|collective_broadcast)"')
-_TENSOR_RE = re.compile(r"tensor<(?:(\d+(?:x\d+)*)x)?([a-zA-Z]\w*)>")
-_STABLE_INT_BYTES = {"i1": 1, "i4": 1, "i8": 1, "i16": 2, "i32": 4,
-                     "i64": 8, "ui8": 1, "ui16": 2, "ui32": 4, "ui64": 8}
-
-
-def stablehlo_collectives(text: str) -> list:
-    """Parse collectives out of StableHLO module text (``lowered.as_text()``).
-
-    Returns [{"kind", "dtype", "numel", "bytes"}], one entry per op, taken
-    from the op's operand side of the type signature."""
-    out = []
-    lines = text.splitlines()
-    for i, line in enumerate(lines):
-        m = _STABLE_COLL_RE.search(line)
-        if not m:
-            continue
-        kind = m.group(1)
-        sig = None
-        if "->" in line and "tensor<" in line.split(":")[-1]:
-            sig = line[line.rindex(":"):]
-        else:
-            for j in range(i + 1, min(i + 400, len(lines))):
-                lj = lines[j].lstrip()
-                if lj.startswith("})") and "tensor<" in lj:
-                    sig = lj[lj.index(":"):]
-                    break
-        if sig is None:
-            continue
-        operand_part = sig.split("->")[0]
-        tm = _TENSOR_RE.search(operand_part)
-        if not tm:
-            continue
-        dims, dt = tm.groups()
-        numel = 1
-        for d in (dims or "").split("x"):
-            if d:
-                numel *= int(d)
-        # stablehlo dtype spellings: f32, bf16, f8E4M3FN, and iN for ints
-        # (HLO spells those sN/uN — map them; skip-to-0 on anything truly
-        # unknown, matching shape_bytes' policy, rather than guessing)
-        key = dt.lower()
-        nbytes = numel * _DTYPE_BYTES.get(
-            key, _STABLE_INT_BYTES.get(key, 0))
-        out.append({"kind": kind, "dtype": dt, "numel": numel,
-                    "bytes": nbytes})
-    return out
-
-
-def quadratic_buffers(text: str, seq_len: int) -> list:
-    """Score-class intermediates in IR text: every tensor shape with TWO OR
-    MORE dims ≥ ``seq_len`` (an attention-score buffer is (…, L, L); no
-    other tensor of a flash train step has two sequence-sized dims when the
-    model dims are kept < L). Handles both compiled-HLO (``f32[a,b]``) and
-    StableHLO (``tensor<axbxf32>``) spellings, so the assert can run on the
-    LOWERED IR — before XLA optimization gets a chance to fuse (or fail to
-    fuse) the buffer away. Used by benchmarks/attention.py for the
-    "no O(L²) buffer in the L≥4k flash train step" acceptance claim."""
-    out = []
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        ds = [int(d) for d in dims.split(",") if d]
-        if sum(1 for d in ds if d >= seq_len) >= 2:
-            out.append(f"{dt}[{dims}]")
-    for m in _TENSOR_RE.finditer(text):
-        dims, dt = m.groups()
-        ds = [int(d) for d in (dims or "").split("x") if d]
-        if sum(1 for d in ds if d >= seq_len) >= 2:
-            out.append(f"tensor<{dims}x{dt}>")
-    return out
-
-
-def collective_dtype_census(text: str) -> dict:
-    """{kind: {dtype: count}} over the StableHLO collectives."""
-    census: dict = {}
-    for c in stablehlo_collectives(text):
-        census.setdefault(c["kind"], {})
-        census[c["kind"]][c["dtype"]] = \
-            census[c["kind"]].get(c["dtype"], 0) + 1
-    return census
+from repro.analysis.hlo import *  # noqa: F401,F403
+from repro.analysis.hlo import (  # noqa: F401
+    _DTYPE_BYTES, _FLOAT_CLAMP, _SHAPE_RE, _STABLE_INT_BYTES, _TENSOR_RE,
+    _attr, _dims_attr, _shape_dims, _split_op_line, _type_bytes)

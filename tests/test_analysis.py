@@ -1,0 +1,379 @@
+"""The static-analysis subsystem (src/repro/analysis/ — DESIGN.md §8).
+
+Three layers of coverage:
+
+  * parsers on handwritten IR — the edge cases that broke (or would break)
+    the regex layer: tuple result types, nested fusions, while trip-count
+    fallback, f8 dtypes, multi-result StableHLO ops, donated-arg attrs;
+  * the passes on REAL single-device lowerings of the tiny-GPT train step
+    — strategy C certifies no-master-copy, strategy D (the deliberate fp32
+    baseline) is caught by the same walk, an injected master copy and a
+    donated-but-unaliasable buffer FAIL their audits (detector teeth);
+  * the source lint on fixture files plus the live repo (models/ + core/
+    must stay clean — every intentional widening carries ``# f32-ok``).
+
+Everything here is single-device: the multi-mesh matrix lives in
+scripts/precision_audit.py and is gated by the bench-regression job.
+"""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from repro.analysis import hlo  # noqa: E402
+from repro.analysis import audit_cell  # noqa: E402
+from repro.analysis.cost_model import model_step  # noqa: E402
+from repro.analysis.donation import check_donation  # noqa: E402
+from repro.analysis.liveness import peak_hbm  # noqa: E402
+from repro.analysis.precision_flow import (  # noqa: E402
+    analyze_precision_flow, assert_no_master_copy)
+from repro.analysis.source_lint import lint_file, lint_paths  # noqa: E402
+from repro.analysis.stablehlo import (  # noqa: E402
+    main_func, parse_stablehlo, tensor_of, type_bytes)
+
+
+# ---------------------------------------------------------------- parsers
+
+class TestCompiledHloParser:
+    def test_tuple_result_type_bytes(self):
+        t = "(f32[4,4], bf16[8], pred[16])"
+        assert hlo.shape_bytes(t) == 4 * 4 * 4 + 8 * 2 + 16
+        # TPU clamp halves floats only
+        assert hlo.shape_bytes_tpu(t) == 4 * 4 * 2 + 8 * 2 + 16
+
+    def test_f8_dtype_bytes(self):
+        assert hlo.shape_bytes("f8e4m3fn[128]") == 128
+        assert hlo.shape_bytes("f8e5m2[64,2]") == 128
+        # f8 is already ≤2B: the TPU clamp must not touch it
+        assert hlo.shape_bytes_tpu("f8e4m3fn[128]") == 128
+
+    def test_tpu_clamp_equals_raw_for_narrow_types(self):
+        for t in ("bf16[32,32]", "s32[77]", "u8[1024]", "s8[5]"):
+            assert hlo.shape_bytes_tpu(t) == hlo.shape_bytes(t)
+        assert hlo.shape_bytes_tpu("f32[10]") == hlo.shape_bytes("f32[10]") // 2
+        assert hlo.shape_bytes_tpu("f64[10]") == 20
+
+    def test_nested_fusion_flops(self):
+        text = textwrap.dedent("""\
+            HloModule m, is_scheduled=true
+
+            %inner (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+              %p0 = f32[8,16] parameter(0)
+              %p1 = f32[16,4] parameter(1)
+              ROOT %d = f32[8,4] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+            }
+
+            %outer (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+              %a = f32[8,16] parameter(0)
+              %b = f32[16,4] parameter(1)
+              ROOT %f = f32[8,4] fusion(%a, %b), kind=kOutput, calls=%inner
+            }
+
+            ENTRY %main (x: f32[8,16], y: f32[16,4]) -> f32[8,4] {
+              %x = f32[8,16] parameter(0)
+              %y = f32[16,4] parameter(1)
+              ROOT %g = f32[8,4] fusion(%x, %y), kind=kOutput, calls=%outer
+            }
+            """)
+        costs = hlo.analyze(text)
+        assert costs.flops == 2 * 8 * 16 * 4
+
+    def test_while_trip_count_fallback(self):
+        # no compare op at all: falls back to the max constant, min 1
+        text = textwrap.dedent("""\
+            HloModule m
+
+            %cond (s: s32[]) -> pred[] {
+              %s = s32[] parameter(0)
+              ROOT %r = pred[] custom-call(%s), custom_call_target="opaque"
+            }
+            """)
+        comps = hlo.parse_hlo(text)
+        assert hlo.while_trip_count(comps["cond"]) == 1
+
+    def test_while_trip_count_from_compare(self):
+        text = textwrap.dedent("""\
+            HloModule m
+
+            %cond (s: s32[]) -> pred[] {
+              %s = s32[] parameter(0)
+              %c = s32[] constant(12)
+              ROOT %lt = pred[] compare(%s, %c), direction=LT
+            }
+            """)
+        comps = hlo.parse_hlo(text)
+        assert hlo.while_trip_count(comps["cond"]) == 12
+
+    def test_input_output_aliases(self):
+        text = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+                "{1, 0}: (2, {}, must-alias) }, entry_computation_layout="
+                "{(bf16[8]{0}, f32[4]{0}, bf16[2,2]{1,0})->"
+                "(bf16[8]{0}, (bf16[2,2]{1,0}, f32[]))}\n")
+        aliases = hlo.input_output_aliases(text)
+        assert {a["param_number"] for a in aliases} == {0, 2}
+        assert aliases[0]["output_index"] == (0,)
+        assert aliases[1]["output_index"] == (1, 0)
+        params, results = hlo.entry_layout_types(text)
+        assert params == ["bf16[8]", "f32[4]", "bf16[2,2]"]
+        assert results[0] == "bf16[8]"
+
+    def test_rectangular_quadratic_buffers(self):
+        text = "%s = f32[2,128,512] op()\n%t = bf16[2,128,64] op()\n"
+        # cross-attention score: L_q=128, L_kv=512 — flagged either order
+        assert hlo.quadratic_buffers(text, 128, kv_len=512) \
+            == ["f32[2,128,512]"]
+        assert hlo.quadratic_buffers(text, 512, kv_len=128) \
+            == ["f32[2,128,512]"]
+        # square rule: no dim pair reaches 512×512
+        assert hlo.quadratic_buffers(text, 512) == []
+        # head-dim-sized second dim never flags
+        assert hlo.quadratic_buffers("%u = f32[128,64] op()", 128,
+                                     kv_len=512) == []
+        # StableHLO spelling (reported verbatim)
+        assert hlo.quadratic_buffers("tensor<4x128x512xbf16>", 128,
+                                     kv_len=512) == ["tensor<4x128x512xbf16>"]
+
+    def test_square_rule_unchanged(self):
+        text = "%s = f32[8,256,256] op()"
+        assert hlo.quadratic_buffers(text, 256) == ["f32[8,256,256]"]
+        assert hlo.quadratic_buffers(text, 512) == []
+
+
+STABLEHLO_FIXTURE = textwrap.dedent("""\
+    module @jit_step attributes {mhlo.num_partitions = 1 : i32} {
+      func.func public @main(%arg0: tensor<8x4xbf16> {jax.buffer_donor = true}, %arg1: tensor<4xf32>, %arg2: tensor<8x4xf8e4m3fn>) -> (tensor<8x4xbf16> {jax.result_info = "[0].params.w"}, tensor<f32> {jax.result_info = "[1]['loss']"}) {
+        %0:2 = "stablehlo.custom_call"(%arg0, %arg1) {api_version = 2 : i32} : (tensor<8x4xbf16>, tensor<4xf32>) -> (tensor<8x4xf32>, tensor<f32>)
+        %1 = stablehlo.convert %0#0 : (tensor<8x4xf32>) -> tensor<8x4xbf16>
+        %2 = stablehlo.while(%iterArg = %1) : tensor<8x4xbf16> cond {
+          %c = stablehlo.constant dense<true> : tensor<i1>
+          stablehlo.return %c : tensor<i1>
+        } do {
+          %b = stablehlo.add %iterArg, %iterArg : tensor<8x4xbf16>
+          stablehlo.return %b : tensor<8x4xbf16>
+        }
+        return %2, %0#1 : tensor<8x4xbf16>, tensor<f32>
+      }
+    }
+    """)
+
+
+class TestStableHloParser:
+    def test_args_results_and_multiresult_ops(self):
+        fn = main_func(STABLEHLO_FIXTURE)
+        assert [a.donated for a in fn.args] == [True, False, False]
+        assert tensor_of(fn.args[2].type) == ((8, 4), "f8e4m3fn")
+        assert fn.results[0].info == "[0].params.w"
+        assert fn.results[1].info == "[1]['loss']"
+        multi = [op for op in fn.ops if op.arity == 2]
+        assert multi and multi[0].result_types == \
+            ["tensor<8x4xf32>", "tensor<f32>"]
+
+    def test_type_bytes(self):
+        assert type_bytes("tensor<8x4xbf16>") == 64
+        assert type_bytes("tensor<f32>") == 4
+        assert type_bytes("tensor<16xf8e5m2>") == 16
+        assert type_bytes("tensor<3xi1>") == 3
+
+    def test_main_func_required(self):
+        with pytest.raises(ValueError):
+            main_func("module @m { func.func @helper() { return } }")
+
+
+# ------------------------------------------------- passes on real lowerings
+
+def _tiny_cell(strategy):
+    """Lower the single-device tiny-GPT train step (tree layout)."""
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.collage import CollageAdamW
+    from repro.core.precision import PrecisionPolicy, parse_strategy
+    from repro.models.model import build_model
+    from repro.train import train_loop
+
+    cfg = get_config("gpt-tiny", smoke=True)
+    shape = ShapeConfig("t", 16, 2, "train")
+    model = build_model(cfg)
+    opt = CollageAdamW(1e-4, policy=PrecisionPolicy(
+        strategy=parse_strategy(strategy)))
+    state_abs = jax.eval_shape(
+        lambda: train_loop.init_state(model, opt, jax.random.PRNGKey(0)))
+    step = train_loop.make_train_step(model, opt)
+    jitted = jax.jit(step, donate_argnums=(0,))
+    lowered = jitted.lower(state_abs, model.input_specs(shape))
+    return lowered, lowered.compile()
+
+
+@pytest.fixture(scope="module")
+def cell_C():
+    return _tiny_cell("C")
+
+
+@pytest.fixture(scope="module")
+def cell_D():
+    return _tiny_cell("D")
+
+
+class TestPrecisionFlow:
+    def test_collage_certifies_no_master_copy(self, cell_C):
+        lowered, _ = cell_C
+        rep = analyze_precision_flow(lowered.as_text(), sixteen_bit=True)
+        assert rep["no_master_copy"], rep["param_f32_persistent"]
+        assert rep["n_state_results"] > 0
+        assert_no_master_copy(rep, "gpt-tiny/C")  # must not raise
+
+    def test_mixed_baseline_is_caught(self, cell_D):
+        """Strategy D *is* the injected fp32 master copy: the same walk
+        that certifies C must flag D's master/moment leaves by name."""
+        lowered, _ = cell_D
+        rep = analyze_precision_flow(lowered.as_text(), sixteen_bit=True)
+        assert not rep["no_master_copy"]
+        names = " ".join(v["name"] for v in rep["param_f32_persistent"])
+        assert "opt_state" in names
+        with pytest.raises(AssertionError, match="master copy"):
+            assert_no_master_copy(rep, "gpt-tiny/D-as-16bit")
+
+    def test_injected_master_output_fails(self):
+        """A hand-built step that smuggles a param-shaped f32 out."""
+        def step(state):
+            w32 = state["w"].astype(jnp.float32) * (1 - 1e-4)
+            return {"w": w32.astype(jnp.bfloat16), "master": w32}
+
+        lowered = jax.jit(step).lower(
+            {"w": jax.ShapeDtypeStruct((128,), jnp.bfloat16)})
+        rep = analyze_precision_flow(lowered.as_text(), sixteen_bit=True,
+                                     state_prefix="")
+        assert [v["name"] for v in rep["param_f32_persistent"]] \
+            == ["['master']"]
+
+    def test_scalar_metrics_are_exempt(self, cell_C):
+        """f32 loss/metric scalars sit below min_numel by design."""
+        lowered, _ = cell_C
+        rep = analyze_precision_flow(lowered.as_text(), sixteen_bit=True)
+        assert rep["f32_state_bytes"] == 0
+
+    def test_allow_names_exempts_by_name(self, cell_D):
+        lowered, _ = cell_D
+        rep = analyze_precision_flow(lowered.as_text(), sixteen_bit=True,
+                                     allow_names=("opt_state",))
+        assert rep["no_master_copy"]
+
+
+class TestDonation:
+    def test_realized_donation(self, cell_C):
+        lowered, compiled = cell_C
+        rep = check_donation(lowered.as_text(), compiled.as_text())
+        assert rep["n_donated"] > 0
+        assert rep["all_donations_realized"], rep["unrealized"]
+
+    def test_unusable_donation_never_reaches_stablehlo(self):
+        """jax drops a donor attr it can prove unusable (bf16 in, only f32
+        out) at lowering — so any donor attr that DOES appear in StableHLO
+        is a live claim against the executable, which is exactly what the
+        checker verifies."""
+        fn = jax.jit(lambda x: x.astype(jnp.float32) * 2, donate_argnums=0)
+        lowered = fn.lower(jax.ShapeDtypeStruct((256,), jnp.bfloat16))
+        rep = check_donation(lowered.as_text(),
+                             lowered.compile().as_text())
+        assert rep["n_donated"] == 0
+
+    def test_broken_donation_is_caught(self, cell_C):
+        """An executable that failed to realize recorded donations (the
+        header carries no input_output_alias) must fail the audit."""
+        import re
+        lowered, compiled = cell_C
+        stripped = re.sub(r"input_output_alias=\{[^}]*(?:\{[^}]*\}[^}]*)*\},",
+                          "", compiled.as_text(), count=1)
+        rep = check_donation(lowered.as_text(), stripped)
+        assert rep["n_donated"] > 0
+        assert rep["n_aliased"] == 0
+        assert rep["unrealized"] and not rep["all_donations_realized"]
+
+
+class TestLivenessAndCost:
+    def test_peak_hbm_bounds(self, cell_C):
+        _, compiled = cell_C
+        rep = peak_hbm(compiled.as_text())
+        assert rep["peak_bytes"] >= rep["param_bytes"] > 0
+        # TPU-equivalent accounting never exceeds raw CPU bytes
+        assert rep["peak_bytes_tpu"] <= rep["peak_bytes"]
+        assert rep["aliased_param_bytes"] > 0
+
+    def test_cost_model_terms(self, cell_C):
+        _, compiled = cell_C
+        rep = model_step(compiled.as_text())
+        assert rep["critical_path_s"] > 0
+        assert rep["modeled_step_s"] >= rep["critical_path_s"]
+        assert rep["bound"] in ("critical_path", "serial_compute_s",
+                                "serial_memory_s", "serial_collective_s")
+        assert rep["parallelism"] >= 1.0
+
+    def test_audit_cell_end_to_end(self, cell_C):
+        lowered, compiled = cell_C
+        rep = audit_cell(lowered.as_text(), compiled.as_text(),
+                         strategy="C")
+        assert rep["ok"] == {"no_master_copy": True,
+                             "all_donations_realized": True}
+        assert rep["liveness"]["peak_bytes"] > 0
+
+    def test_audit_cell_flags_mixed(self, cell_D):
+        lowered, compiled = cell_D
+        rep = audit_cell(lowered.as_text(), compiled.as_text(),
+                         strategy="D")
+        assert rep["precision_flow"]["sixteen_bit"] is False
+        assert not rep["ok"]["no_master_copy"]
+
+
+# ------------------------------------------------------------- source lint
+
+class TestSourceLint:
+    def _lint(self, tmp_path, src):
+        p = tmp_path / "m.py"
+        p.write_text(textwrap.dedent(src))
+        return lint_file(str(p))
+
+    def test_naked_astype_flagged(self, tmp_path):
+        out = self._lint(tmp_path, """\
+            import jax.numpy as jnp
+            def f(x):
+                return x.astype(jnp.float32)
+            """)
+        assert [v["code"] for v in out] == ["naked-astype-f32"]
+        assert out[0]["line"] == 3
+
+    def test_dtype_kwarg_flagged(self, tmp_path):
+        out = self._lint(tmp_path, """\
+            import jax.numpy as jnp
+            y = jnp.zeros((4,), dtype=jnp.float32)
+            z = jnp.ones((4,), dtype="float32")
+            """)
+        assert [v["code"] for v in out] == ["f32-dtype-arg"] * 2
+
+    def test_allow_mark_same_line(self, tmp_path):
+        assert self._lint(tmp_path, """\
+            import jax.numpy as jnp
+            x = y.astype(jnp.float32)  # f32-ok: reference oracle
+            """) == []
+
+    def test_allow_mark_line_above(self, tmp_path):
+        assert self._lint(tmp_path, """\
+            import jax.numpy as jnp
+            # f32-ok: strict-FPU scratch
+            x = y.astype(jnp.float32)
+            """) == []
+
+    def test_narrow_casts_not_flagged(self, tmp_path):
+        assert self._lint(tmp_path, """\
+            import jax.numpy as jnp
+            x = y.astype(jnp.bfloat16)
+            z = jnp.zeros((4,), dtype=jnp.bfloat16)
+            """) == []
+
+    def test_live_repo_is_clean(self):
+        """models/ and core/ carry no un-annotated f32 promotions — the
+        same invariant scripts/precision_audit.py publishes to the gated
+        artifact."""
+        assert lint_paths(repo_root=REPO) == []

@@ -120,6 +120,73 @@ class TestDoctoredArtifactsFail:
         v = cr.check_decode(cur, base)
         assert any("baseline" in x for x in v), v
 
+    def test_injected_master_copy_fails(self):
+        """A 16-bit cell that suddenly carries parameter-shaped f32 state
+        across steps is the paper's central claim broken."""
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cell = cur["cells"]["gpt-tiny/C/flat"]
+        cell["n_param_f32_persistent"] = 1
+        cell["param_f32_persistent"] = ["[0].opt_state.master[0]"]
+        cell["ok"]["no_master_copy"] = False
+        v = cr.check_precision_audit(cur, base)
+        assert any("master copy" in x for x in v), v
+
+    def test_toothless_mixed_baseline_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cell = cur["cells"]["gpt-tiny/D/flat"]
+        cell["n_param_f32_persistent"] = 0
+        cell["param_f32_persistent"] = []
+        assert any("teeth" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_broken_donation_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cur["cells"]["gpt-tiny/C/zero"]["n_unrealized"] = 6
+        assert any("donation broke" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_missing_audit_cell_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        del cur["cells"]["gpt-tiny/C/pipeline"]
+        assert any("missing" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_new_promotion_site_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cur["cells"]["gpt-tiny/SR/flat"]["transient_param_shaped_f32"] += 1
+        assert any("promotion" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_audit_state_bytes_regression_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cur["cells"]["gpt-tiny/C/flat"]["state_bytes"] *= 2
+        assert any("state_bytes" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_memory_gap_shrink_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cur["memory_gap"]["gpt-tiny"]["state_ratio"] = 1.5
+        cur["ok"]["collage_state_smaller_than_mixed"] = False
+        assert any("advantage shrank" in x
+                   for x in cr.check_precision_audit(cur, base))
+
+    def test_dirty_source_lint_fails(self):
+        base = _load("BENCH_precision_audit.json")
+        cur = copy.deepcopy(base)
+        cur["source_lint"] = {"n_findings": 1, "findings": [
+            {"file": "src/repro/core/collage.py", "line": 1,
+             "code": "naked-astype-f32", "snippet": "x.astype(f32)"}]}
+        cur["ok"]["source_lint_clean"] = False
+        assert any("lint" in x
+                   for x in cr.check_precision_audit(cur, base))
+
     def test_missing_baseline_fails_cli(self, tmp_path):
         art = tmp_path / "BENCH_train_step.json"
         art.write_text(json.dumps(_load("BENCH_train_step.json")))
