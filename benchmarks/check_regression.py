@@ -102,6 +102,34 @@ def check_train_step(cur: dict, base: dict) -> list:
               <= b["per_device_flops"] * SIZE_TOL,
               f"timing/{name}: per-device FLOPs {c['per_device_flops']:.3e}"
               f" > baseline {b['per_device_flops']:.3e}×{SIZE_TOL}")
+    # schedule cost model (PR 7): gate the ORDERINGS, not the seconds —
+    # 1F1B and interleaved must model a smaller bubble than GPipe at equal
+    # (S, M), and readiness-launched collectives must model a finish no
+    # later than the everything-after-compute serialization
+    if "schedule_model" in base:
+        _viol(out, "schedule_model" in cur,
+              "schedule_model section missing from current artifact")
+    for key, cell in cur.get("schedule_model", {}).items():
+        if not key.startswith("S"):
+            continue
+        gp = cell["gpipe"]["bubble_fraction"]
+        for sched in ("1f1b", "interleaved"):
+            _viol(out, cell[sched]["bubble_fraction"] < gp,
+                  f"schedule_model/{key}: {sched} modeled bubble "
+                  f"{cell[sched]['bubble_fraction']:.3f} not below gpipe "
+                  f"{gp:.3f}")
+        comm = cell["1f1b"].get("comm", {})
+        _viol(out, comm.get("overlapped_total_s", 0)
+              <= comm.get("serialized_total_s", 0),
+              f"schedule_model/{key}: overlapped comm finish "
+              f"{comm.get('overlapped_total_s')} exceeds serialized "
+              f"baseline {comm.get('serialized_total_s')}")
+    fb = cur.get("schedule_model", {}).get("flat_buckets")
+    if fb is not None or "flat_buckets" in base.get("schedule_model", {}):
+        _viol(out, fb is not None
+              and fb["overlapped_total_s"] <= fb["serialized_total_s"],
+              "schedule_model/flat_buckets: per-bucket overlapped reduce "
+              "models no better than the serialized baseline")
     _check_ok_flags(cur, base, out, "train_step")
     return out
 

@@ -94,12 +94,22 @@ def _bench(quick: bool, out_path: str) -> dict:
             "grad_ops": len(grad_colls),
             "grad_ops_by_dtype": _by_dtype(grad_colls),
             "staged_wire_bytes": sum(c["bytes"] for c in grad_colls),
+            # fabric-total traffic: a collective with G replica groups runs
+            # G independent reductions of the same payload — this is where
+            # the embed/head joint-group dedup shows its S× saving
+            "global_wire_bytes": sum(
+                c["bytes"] * (c["n_groups"] or 1) for c in grad_colls),
+            "grad_groups": sorted(
+                (c["dtype"], c["n_groups"], c["group_size"])
+                for c in grad_colls),
         }
 
-    def census_pipeline(compress):
-        # GPipe (2 stages × dp 4): the dp gradient reduction compresses at
-        # (leaf class × dtype) bucket granularity — stage chunks / embed /
-        # head each ship ONE compressed all-reduce (train/sharded.py)
+    def census_pipeline(compress, schedule="gpipe"):
+        # 2 stages × dp 4: the dp gradient reduction compresses at (leaf
+        # class × dtype) bucket granularity — stage chunks / embed / head
+        # each ship ONE compressed all-reduce; embed and head lower with a
+        # single JOINT (pipe × dp) replica group instead of one dp group
+        # per stage row (train/sharded.py dedup)
         pmesh = jax.make_mesh((2, 4), ("pipe", "data"))
         opt = mkopt(False, pmesh)
         state = sharded.init_state(model, opt, jax.random.PRNGKey(0),
@@ -110,11 +120,59 @@ def _bench(quick: bool, out_path: str) -> dict:
                                          pipeline_axis="pipe")
         step = sharded.make_sharded_train_step(
             model, opt, pmesh, axis="data", pipeline_axis="pipe",
-            grad_compression=compress, jit=False)
+            grad_compression=compress, schedule=schedule, jit=False)
         chunked = jax.tree_util.tree_map(
             lambda x: x.reshape((4, 8) + x.shape[1:]), batch_fn(0))
         txt = jax.jit(step).lower(state, chunked).as_text()
         return _census_of(txt)
+
+    def schedule_model():
+        # structural cost model (analysis/cost_model.py): masked-tick
+        # bubbles per schedule + single-channel comm overlap, at the bench
+        # cell's scale (S=2 pipeline below; a deeper S=4 point shows the
+        # ramp effects). Pure arithmetic on the Schedule IR — gated as
+        # ORDERINGS, not absolute seconds.
+        from repro.analysis import cost_model
+        from repro.core import bucketing
+        from repro.distributed import pipeline as pp
+        comm = {"stage": 2e-4, "embed": 1e-4, "head": 1e-4}
+        out = {}
+        for S, M in ((2, 4), (4, 8)):
+            cell = {}
+            for name, V in (("gpipe", 1), ("1f1b", 1), ("interleaved", 2)):
+                st = pp.make_schedule(name, n_stages=S, n_micro=M,
+                                      n_virtual=V).stats()
+                cell[name] = cost_model.schedule_cost(
+                    st, fwd_unit_s=1e-3, bwd_unit_s=2e-3, comm_cost_s=comm)
+            out[f"S{S}_M{M}"] = cell
+        # flat-dp per-bucket overlap: grads close in reverse layer order
+        # during the backward; each bucket's all-reduce launches at its
+        # close rank (core/bucketing.py close-rank metadata == the
+        # engine's reduce_fn program order). The uniform-bf16 bench model
+        # packs ONE bucket (nothing to overlap), so the model point uses a
+        # mixed-precision layout — bf16 matmuls + f32 norm scales per
+        # layer, the option-D master-dtype split — where the dtype buckets
+        # close at different backward ranks.
+        import jax.numpy as jnp
+        tree = {}
+        for i in range(8):
+            tree[f"l{i:02d}_w"] = jnp.zeros((4096,), jnp.bfloat16)
+            tree[f"l{i:02d}_scale"] = jnp.zeros((256,), jnp.float32)
+        layout = bucketing.build_layout(tree, pad_multiple=512)
+        n_leaves = len(layout.slots)
+        leaf_ranks = tuple(n_leaves - 1 - i for i in range(n_leaves))
+        close = bucketing.bucket_close_ranks(layout, leaf_ranks)
+        bwd_s = 2e-3
+        events = sorted(
+            ((close[b] + 1) / n_leaves * bwd_s,
+             layout.buckets[b].padded * 2 / 50e9, b)
+            for b in bucketing.readiness_order(layout, leaf_ranks))
+        out["flat_buckets"] = {
+            "n_buckets": layout.n_buckets,
+            "close_ranks": list(close),
+            **cost_model.overlap_comm(events, bwd_s),
+        }
+        return out
 
     def _by_dtype(colls):
         out: dict = {}
@@ -159,8 +217,11 @@ def _bench(quick: bool, out_path: str) -> dict:
             "bucket_uncompressed": census(mesh8, True, "none", False),
             "bucket_zero_bf16_ef": census(mesh8, True, "bf16_ef", True),
             "pipeline_fp8_ef": census_pipeline("fp8_ef"),
+            "pipeline_1f1b_fp8_ef": census_pipeline("fp8_ef",
+                                                    schedule="1f1b"),
             "pipeline_uncompressed": census_pipeline("none"),
         },
+        "schedule_model": schedule_model(),
         "timing": {
             "dp1_bucket_bf16_ef": timed(mesh1, True, "bf16_ef", False,
                                         iters),
@@ -201,6 +262,45 @@ def _bench(quick: bool, out_path: str) -> dict:
             c["pipeline_fp8_ef"]["staged_wire_bytes"]
             < c["pipeline_uncompressed"]["staged_wire_bytes"],
     }
+
+    def joint_dedup(cen):
+        # embed + head each lower with ONE joint (pipe×dp = 8-wide) replica
+        # group; the stage-class reduce stays dp-only (2 groups of 4). The
+        # old per-stage-row scheme would ship S=2 groups for embed/head too
+        # — S× the fabric traffic for those classes.
+        g = [t for t in cen["grad_groups"] if t[0] == "f8E4M3FN"]
+        return sorted(tuple(t[1:]) for t in g) == [(1, 8), (1, 8), (2, 4)]
+
+    sm = results["schedule_model"]
+    results["ok"].update({
+        # satellite 1: the wire-bytes dedup census — joint groups on the
+        # lowered IR for every schedule, and compressed fabric traffic
+        # strictly below the uncompressed pipeline step's
+        "pipeline_embed_head_joint_group_dedup":
+            joint_dedup(c["pipeline_fp8_ef"])
+            and joint_dedup(c["pipeline_1f1b_fp8_ef"]),
+        "pipeline_global_wire_bytes_compressed_below_uncompressed":
+            c["pipeline_fp8_ef"]["global_wire_bytes"]
+            < c["pipeline_uncompressed"]["global_wire_bytes"],
+        # satellite 2: per-schedule bubble accounting, gated as orderings
+        "schedule_1f1b_bubble_below_gpipe": all(
+            cell["1f1b"]["bubble_fraction"]
+            < cell["gpipe"]["bubble_fraction"]
+            for k, cell in sm.items() if k.startswith("S")),
+        "schedule_interleaved_bubble_below_gpipe": all(
+            cell["interleaved"]["bubble_fraction"]
+            < cell["gpipe"]["bubble_fraction"]
+            for k, cell in sm.items() if k.startswith("S")),
+        # overlapped collectives launched at bucket-class readiness beat
+        # the everything-after-compute serialization
+        "schedule_overlap_below_serialized": all(
+            cell["1f1b"]["comm"]["overlapped_total_s"]
+            < cell["1f1b"]["comm"]["serialized_total_s"]
+            for k, cell in sm.items() if k.startswith("S")),
+        "flat_bucket_overlap_below_serialized":
+            sm["flat_buckets"]["overlapped_total_s"]
+            < sm["flat_buckets"]["serialized_total_s"],
+    })
 
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)

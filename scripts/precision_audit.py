@@ -58,7 +58,7 @@ D_OVERRIDES = dict(engine="sharded", bucketed="0", smoke="1")
 
 
 def _mesh(mode: str):
-    if mode == "pipeline":
+    if mode.startswith("pipeline"):
         return jax.make_mesh((2, 4), ("pipe", "data"))
     return jax.make_mesh((8,), ("data",))
 
@@ -115,6 +115,18 @@ def run_audit(archs=ARCHS, quick: bool = False) -> dict:
         print(f"[audit] {key}: master_leaves="
               f"{cells[key]['param_f32_persistent']} "
               f"({cells[key]['wall_seconds']}s)", flush=True)
+
+    # ONE 1F1B cell (PR 7): the schedule interpreter's explicit-vjp
+    # backward is a new precision path — the no-master-copy invariant must
+    # hold through it too. A single (smallest-arch, C) cell keeps the
+    # matrix CI-sized; per-schedule numerics are pinned by the parity
+    # tests, this pins the STATIC precision flow.
+    key = f"{archs[0]}/C/pipeline_1f1b"
+    print(f"[audit] {key} ...", flush=True)
+    cells[key] = run_one(archs[0], "C", "pipeline_1f1b",
+                         dict(MODES["pipeline"], schedule="1f1b"))
+    print(f"[audit] {key}: ok={cells[key]['ok']} "
+          f"({cells[key]['wall_seconds']}s)", flush=True)
 
     # collage-vs-mixed memory gap, per arch, from the flat cells
     memory_gap = {}

@@ -19,6 +19,16 @@ terms this bounds modeled step time from two sides:
 This is the groundwork ROADMAP item 3 (modeled-time CI gate + autotuner)
 builds on: the number is a pure function of the compiled IR, so a schedule
 or partitioning regression moves it deterministically — no wall-clock noise.
+
+Pipeline-schedule layer (PR 7): :func:`schedule_cost` prices a compiled
+Schedule IR (``distributed.pipeline.make_schedule(...).stats()`` — passed
+as the plain stats dict so this module stays importable without jax) under
+the masked-tick execution model, and :func:`overlap_comm` models a single
+in-order collective channel launching each gradient bucket the tick its
+class closes (``comm_ready``) instead of after the full backward. Both are
+pure arithmetic — the CI gate (benchmarks/check_regression.py) pins the
+ORDERING claims (1F1B bubble < GPipe at equal (S, M); overlapped comm
+finish ≤ serialized) rather than absolute seconds.
 """
 from __future__ import annotations
 
@@ -39,6 +49,66 @@ def _default_hw() -> dict:
         return dict(HW)
     except Exception:
         return dict(DEFAULT_HW)
+
+
+def overlap_comm(events, compute_end_s: float) -> dict:
+    """Single in-order collective channel overlapped with compute.
+
+    ``events``: [(ready_s, cost_s, key)] in LAUNCH order (the engine
+    launches buckets in readiness order, so callers pass them sorted by
+    ready time). Each transfer starts when its data is ready AND the
+    channel is free: ``start_k = max(ready_k, finish_{k-1})``. The step
+    ends when both compute and the last transfer have drained.
+
+    Returns per-key (ready/start/finish) plus the two totals the gate
+    compares: ``overlapped_total_s`` (this model) and ``serialized_total_s``
+    (the no-overlap baseline — every transfer after compute_end)."""
+    per_key = {}
+    finish = 0.0
+    total_cost = 0.0
+    for ready, cost, key in events:
+        start = max(float(ready), finish)
+        finish = start + float(cost)
+        total_cost += float(cost)
+        per_key[key] = {"ready_s": float(ready), "start_s": start,
+                        "finish_s": finish}
+    return {
+        "per_key": per_key,
+        "overlapped_total_s": max(float(compute_end_s), finish),
+        "serialized_total_s": float(compute_end_s) + total_cost,
+    }
+
+
+def schedule_cost(stats: dict, *, fwd_unit_s: float = 1.0,
+                  bwd_unit_s: float = 2.0,
+                  comm_cost_s: dict | None = None) -> dict:
+    """Price a pipeline schedule's stats() dict under the masked-tick model.
+
+    ``fwd_unit_s``/``bwd_unit_s``: one microbatch through one STAGE's layer
+    chunk (L/S layers); a tick executes one masked fwd and one masked bwd
+    unit of 1/V that size, so ``tick_s = (fwd+bwd)/V`` and bubble ticks
+    cost the same as real ones (SPMD lax.scan cannot skip per-device work).
+    ``comm_cost_s``: seconds per gradient bucket class (stage/embed/head);
+    each class launches at ``comm_ready[class] · tick_s`` in readiness
+    order on one channel (:func:`overlap_comm`)."""
+    T, M, V = stats["n_ticks"], stats["n_micro"], stats["n_virtual"]
+    tick_s = (fwd_unit_s + bwd_unit_s) / V
+    compute_s = T * tick_s
+    ideal_s = M * (fwd_unit_s + bwd_unit_s)
+    out = {
+        "name": stats["name"],
+        "n_ticks": T,
+        "tick_s": tick_s,
+        "compute_s": compute_s,
+        "ideal_compute_s": ideal_s,
+        "bubble_fraction": 1.0 - ideal_s / compute_s,
+    }
+    if comm_cost_s:
+        events = sorted(
+            (stats["comm_ready"][k] * tick_s, comm_cost_s[k], k)
+            for k in comm_cost_s)
+        out["comm"] = overlap_comm(events, compute_s)
+    return out
 
 
 def model_step(compiled_text: str, hw: dict | None = None) -> dict:

@@ -536,13 +536,21 @@ _STABLE_COLL_RE = re.compile(
 _TENSOR_RE = re.compile(r"tensor<(?:(\d+(?:x\d+)*)x)?([a-zA-Z]\w*)>")
 _STABLE_INT_BYTES = {"i1": 1, "i4": 1, "i8": 1, "i16": 2, "i32": 4,
                      "i64": 8, "ui8": 1, "ui16": 2, "ui32": 4, "ui64": 8}
+_REPLICA_GROUPS_RE = re.compile(
+    r"replica_groups\s*=\s*dense<[^>]*>\s*:\s*tensor<(\d+)x(\d+)xi64>")
 
 
 def stablehlo_collectives(text: str) -> list:
     """Parse collectives out of StableHLO module text (``lowered.as_text()``).
 
-    Returns [{"kind", "dtype", "numel", "bytes"}], one entry per op, taken
-    from the op's operand side of the type signature."""
+    Returns [{"kind", "dtype", "numel", "bytes", "n_groups",
+    "group_size"}], one entry per op, with the payload taken from the op's
+    operand side of the type signature. ``n_groups``/``group_size`` come
+    from the ``replica_groups`` attr (None when absent): a collective with
+    G independent groups performs G separate reductions of the same-shaped
+    payload, so GLOBAL fabric traffic scales with G — the quantity the
+    embed/head dedup census compares (one joint (pipe×dp) group vs S
+    per-stage-row dp groups)."""
     out = []
     lines = text.splitlines()
     for i, line in enumerate(lines):
@@ -550,6 +558,9 @@ def stablehlo_collectives(text: str) -> list:
         if not m:
             continue
         kind = m.group(1)
+        gm = _REPLICA_GROUPS_RE.search(line)
+        n_groups, group_size = (int(gm.group(1)), int(gm.group(2))) \
+            if gm else (None, None)
         sig = None
         if "->" in line and "tensor<" in line.split(":")[-1]:
             sig = line[line.rindex(":"):]
@@ -577,7 +588,8 @@ def stablehlo_collectives(text: str) -> list:
         nbytes = numel * _DTYPE_BYTES.get(
             key, _STABLE_INT_BYTES.get(key, 0))
         out.append({"kind": kind, "dtype": dt, "numel": numel,
-                    "bytes": nbytes})
+                    "bytes": nbytes, "n_groups": n_groups,
+                    "group_size": group_size})
     return out
 
 

@@ -142,6 +142,34 @@ def build_layout(params: Any, *, max_bucket_elems: Optional[int] = None,
     return BucketLayout(treedef, tuple(slots), specs, pad_multiple)
 
 
+def bucket_close_ranks(layout: BucketLayout,
+                       leaf_ranks: Sequence[int]) -> tuple:
+    """Per-bucket readiness rank: the rank at which the bucket CLOSES.
+
+    ``leaf_ranks[i]`` is the point (any monotone unit: backward-pass layer
+    index, schedule tick, …) at which leaf *i* (treedef order, matching
+    ``layout.slots``) has its gradient ready. A bucket's collective may
+    launch once its LAST leaf is ready, so close rank = max over member
+    leaves. Pure host-side metadata — feeds the cost model's overlap
+    analysis and documents the per-bucket launch points the engine's
+    ``reduce_fn`` interleaving realizes in program order."""
+    assert len(leaf_ranks) == len(layout.slots), \
+        (len(leaf_ranks), len(layout.slots))
+    close = [None] * layout.n_buckets
+    for slot, r in zip(layout.slots, leaf_ranks):
+        if close[slot.bucket] is None or r > close[slot.bucket]:
+            close[slot.bucket] = r
+    return tuple(close)
+
+
+def readiness_order(layout: BucketLayout,
+                    leaf_ranks: Sequence[int]) -> tuple:
+    """Bucket indices sorted by close rank (ties: layout order) — the order
+    in which per-bucket gradient collectives become launchable."""
+    close = bucket_close_ranks(layout, leaf_ranks)
+    return tuple(sorted(range(layout.n_buckets), key=lambda b: (close[b], b)))
+
+
 # --------------------------------------------------------------------------
 # bucket / unbucket / rebucket (concat happens ONLY here — at init,
 # checkpoint migration, or the model-apply boundary; never in the step)

@@ -151,7 +151,7 @@ class CollageAdamW:
     def step_bucketed(self, grads, bparams: bucketing.BucketedParams,
                       bstate: bucketing.BucketedOptState, *,
                       metrics_partials: bool = False,
-                      elem_offsets=None):
+                      elem_offsets=None, reduce_fn=None):
         """One step over buckets: one fused launch per bucket, no per-step
         flatten/concat (tests assert the jaxpr is concat-free). ``grads`` is
         a BucketedParams (``jax.grad`` w.r.t. bucketed params) or a tuple of
@@ -161,11 +161,15 @@ class CollageAdamW:
         metrics exact. ``elem_offsets`` (SR + ZeRO): per-bucket flat-axis
         start of this shard inside the full bucket, so the counter-based
         noise stream indexes elements bucket-globally and the sharded step
-        stays bit-identical to the unsharded one."""
+        stays bit-identical to the unsharded one. ``reduce_fn`` (sharded
+        engine): per-bucket ``(i, grad) → reduced grad`` hook so each
+        bucket's gradient collective launches at its readiness point,
+        adjacent to its own update, instead of in one serialized wall."""
         from repro.kernels.collage_update import ops as kops
         return kops.bucketed_step(self, grads, bparams, bstate,
                                   metrics_partials=metrics_partials,
-                                  elem_offsets=elem_offsets)
+                                  elem_offsets=elem_offsets,
+                                  reduce_fn=reduce_fn)
 
     # ------------------------------------------------------------------ step
     def step(self, grads: Any, params: Any, state: CollageOptState, *,

@@ -215,7 +215,7 @@ def _psum(x, axis):
 
 
 def pmean_compressed(g: jax.Array, err: Optional[jax.Array], dtype, axis,
-                     n_dev: int):
+                     n_dev: int, headroom: Optional[float] = None):
     """EF-compressed mean-all-reduce of one array over shard_map ``axis``.
 
     quantize(g+err) → psum of the ``dtype`` payload → dequantize/n. For fp8
@@ -223,6 +223,14 @@ def pmean_compressed(g: jax.Array, err: Optional[jax.Array], dtype, axis,
     onto one grid, with 1/n_dev headroom so the sum stays on-range; the
     scale vector is BLOCK× smaller than the payload. ``axis=None``
     degenerates to the local round-trip (n_dev must be 1).
+
+    ``headroom`` (default ``n_dev``) decouples fp8 overflow headroom from
+    the mean divisor: when ``axis`` is a *tuple* of mesh axes whose product
+    counts more devices than contribute distinct values — e.g. the deduped
+    pipeline embed/head reduce over ``("pipe", "data")``, where only ticked
+    stage rows carry nonzero grads but all S·n_dp payloads are summed —
+    the sum spans up to ``headroom`` payloads while the true mean divides
+    by ``n_dev`` only.
 
     Returns (mean32, new_residual)."""
     g32 = g.astype(jnp.float32)
@@ -232,7 +240,9 @@ def pmean_compressed(g: jax.Array, err: Optional[jax.Array], dtype, axis,
         amax = block_amax(g32)
         if axis is not None:
             amax = jax.lax.pmax(amax, axis)
-        scale = fp8_scale(amax, dtype, headroom=float(n_dev))
+        scale = fp8_scale(amax, dtype,
+                          headroom=float(n_dev if headroom is None
+                                         else headroom))
         payload, deq32 = quantize(g32, dtype, scale)
         summed = _psum(payload, axis)
         mean32 = dequantize(summed, dtype, scale) / n_dev

@@ -127,7 +127,7 @@ def _scalars(opt, t):
 def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
                   bstate: bucketing.BucketedOptState, *,
                   metrics_partials: bool = False,
-                  elem_offsets=None):
+                  elem_offsets=None, reduce_fn=None):
     """One optimizer step over persistent buckets.
 
     ``grads``: BucketedParams (from ``jax.grad`` w.r.t. a BucketedParams) or
@@ -142,7 +142,14 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
     step passes ``axis_index · padded/n_dp`` so the SR noise stream stays
     bucket-global and SR + ZeRO is bit-identical to the unsharded step.
     None → offset 0 (unsharded). Ignored for non-SR strategies (the update
-    is otherwise purely elementwise)."""
+    is otherwise purely elementwise).
+    ``reduce_fn``: optional ``(bucket_index, raw_bucket_grad) → reduced
+    grad`` hook called immediately before each bucket's update. The sharded
+    engine passes its compressed-collective closure here so collective *i*
+    sits adjacent to update *i* in program order — bucket-granular
+    readiness the latency-hiding scheduler can overlap (collective *i+1*
+    runs under update *i*) instead of one serialized all-reduce wall before
+    the whole optimizer step. None → grads are used as given."""
     s = opt.policy.strategy
     layout = bparams.layout
     gdata = grads.data if isinstance(grads, bucketing.BucketedParams) \
@@ -164,7 +171,8 @@ def bucketed_step(opt, grads, bparams: bucketing.BucketedParams,
         seed = bucketing.fold_seed(bstate.rng, t, i) if s is Strategy.SR \
             else None
         off = elem_offsets[i] if elem_offsets is not None else None
-        out, part = _update_one_bucket(opt, sd, gdata[i], lr, bc1, bc2,
+        g_i = gdata[i] if reduce_fn is None else reduce_fn(i, gdata[i])
+        out, part = _update_one_bucket(opt, sd, g_i, lr, bc1, bc2,
                                        seed, opt.kernel_interpret,
                                        elem_offset=off)
         for f in fields:

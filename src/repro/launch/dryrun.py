@@ -148,6 +148,12 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
             # gradient collectives (the GSPMD path below can only model
             # the compression locally)
             pipeline_axis = overrides.get("pipeline") or None
+            # schedule-as-data engine switches: schedule=gpipe|1f1b|
+            # interleaved picks the Schedule IR the cell lowers, virtual=V
+            # adds interleaved virtual chunks (layer stacks reshaped to
+            # (V, S, L/(S·V), …))
+            schedule = overrides.get("schedule", "gpipe")
+            virtual = int(overrides.get("virtual", "1"))
             dp_axes = tuple(a for a in ("pod", "data")
                             if a in mesh.axis_names)
             axis = dp_axes[0] if len(dp_axes) == 1 else dp_axes
@@ -163,10 +169,11 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
                 lambda: sharded_lib.init_state(
                     model, opt, jax.random.PRNGKey(0), mesh, axis=axis,
                     grad_compression=grad_compression,
-                    pipeline_axis=pipeline_axis))
+                    pipeline_axis=pipeline_axis, virtual_stages=virtual))
             sspecs = sharded_lib.state_pspecs(state_abs, axis=axis,
                                               zero_shard=zero,
-                                              pipeline_axis=pipeline_axis)
+                                              pipeline_axis=pipeline_axis,
+                                              virtual_stages=virtual)
             state_sh = sharded_lib.named_shardings(state_abs, sspecs, mesh)
             batch_abs = model.input_specs(shape)
             batch_abs = jax.tree_util.tree_map(
@@ -179,14 +186,17 @@ def lower_cell(arch: str, shape_name: str, mesh, precision: str = "C",
             step = sharded_lib.make_sharded_train_step(
                 model, opt, mesh, axis=axis, remat=remat,
                 grad_compression=grad_compression, zero_shard=zero,
-                pipeline_axis=pipeline_axis, jit=False)
+                pipeline_axis=pipeline_axis, schedule=schedule,
+                virtual_stages=virtual, jit=False)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                              out_shardings=(state_sh, None),
                              donate_argnums=(0,))
             lowered = jitted.lower(state_abs, batch_abs)
             meta = {"grad_accum": n_acc, "microbatch_global": mb_global,
                     "engine": "sharded", "zero_shard": zero,
-                    "pipeline_axis": pipeline_axis}
+                    "pipeline_axis": pipeline_axis,
+                    "schedule": schedule if pipeline_axis else None,
+                    "virtual_stages": virtual}
         elif shape.mode == "train":
             n_acc, mb_global = accum_plan(cfg, shape, n_dp)
             if "accum" in overrides:

@@ -6,15 +6,17 @@ dry-run lowers for the production meshes).
 
 Distributed (shard_map engine, train/sharded.py): ``--dp N`` runs the
 data-parallel sharded step (+ ``--zero`` for ZeRO bucket sharding with
-``--bucketed``, ``--pipeline-stages S`` for the GPipe schedule on uniform
-decoder stacks). On CPU this needs
-``XLA_FLAGS=--xla_force_host_platform_device_count=<dp·stages>`` exported
-BEFORE launch (jax locks the device count at first use).
+``--bucketed``, ``--pipeline-stages S`` with ``--schedule
+gpipe|1f1b|interleaved`` for the schedule-as-data pipeline engine on
+uniform decoder stacks; interleaved takes ``--virtual-stages V``). On CPU
+this needs ``XLA_FLAGS=--xla_force_host_platform_device_count=<dp·stages>``
+exported BEFORE launch (jax locks the device count at first use).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -65,6 +67,8 @@ def build(args):
             remat=args.remat, grad_compression=args.grad_compression,
             zero_shard=True if args.zero else None,
             pipeline_axis=pipeline_axis,
+            schedule=args.schedule if pipeline_axis else "gpipe",
+            virtual_stages=args.virtual_stages if pipeline_axis else 1,
             flash_min_len=args.flash_min_len)
     else:
         step_fn = jax.jit(train_loop.make_train_step(
@@ -101,10 +105,25 @@ def main(argv=None):
                          "— the counter-based noise stream is shard-offset "
                          "so the sharded run is bit-identical)")
     ap.add_argument("--pipeline-stages", type=int, default=1,
-                    help="GPipe stages over a 'pipe' mesh axis (uniform "
+                    help="pipeline stages over a 'pipe' mesh axis (uniform "
                          "decoder stacks incl. MoE; batch is chunked to "
                          "--microbatch rows per microbatch; composes with "
                          "--grad-compression on the dp axis)")
+    ap.add_argument("--schedule", default="gpipe",
+                    choices=("gpipe", "1f1b", "interleaved"),
+                    help="pipeline schedule IR to compile "
+                         "(distributed/pipeline.py make_schedule); "
+                         "interleaved needs --virtual-stages >= 2 and "
+                         "n_micro %% stages == 0")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="virtual chunks per device for the interleaved "
+                         "schedule (layer stacks reshaped to "
+                         "(V, S, L/(S*V), ...))")
+    ap.add_argument("--xla-latency-hiding", action="store_true",
+                    help="enable XLA's latency-hiding scheduler + async "
+                         "collective streams (GPU backends; parsed but "
+                         "inert on CPU — informational there). Appended to "
+                         "XLA_FLAGS before first device use")
     ap.add_argument("--sr-seed", type=int, default=0,
                     help="stochastic-rounding noise seed (--precision SR)")
     ap.add_argument("--flash-min-len", type=int, default=None,
@@ -123,17 +142,32 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
+    if args.xla_latency_hiding:
+        # must land in XLA_FLAGS before the first backend init (imports
+        # don't trigger it; jax.make_mesh below does). The flags are
+        # registered on every backend but only move the schedule on GPU —
+        # SNIPPETS latency-hiding recipe.
+        lh = ("--xla_gpu_enable_latency_hiding_scheduler=true "
+              "--xla_gpu_enable_highest_priority_async_stream=true")
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + lh).strip()
+        if jax.default_backend() == "cpu":
+            print("[xla-latency-hiding] CPU backend: flags parsed but "
+                  "scheduling is unchanged (informational)")
+
     cfg, model, opt, step_fn, batch_fn, mesh, pipeline_axis = build(args)
     if mesh is not None:
+        vstages = args.virtual_stages if pipeline_axis else 1
         state = sharded.init_state(model, opt, jax.random.PRNGKey(args.seed),
                                    mesh, axis="data",
                                    grad_compression=args.grad_compression,
-                                   pipeline_axis=pipeline_axis)
+                                   pipeline_axis=pipeline_axis,
+                                   virtual_stages=vstages)
         zero_eff = args.zero or (args.bucketed and args.dp > 1
                                  and pipeline_axis is None)
         state = sharded.device_put_state(
             state, mesh, axis="data", zero_shard=zero_eff,
-            pipeline_axis=pipeline_axis)
+            pipeline_axis=pipeline_axis, virtual_stages=vstages)
         if pipeline_axis is not None and not args.microbatch:
             raise SystemExit("--pipeline-stages needs --microbatch (the "
                              "GPipe schedule consumes (n_micro, mb, L) "

@@ -28,27 +28,46 @@ Composition with the PR-1 bucket engine (core.bucketing):
     it is the reference and the benchmark baseline.
 
 Pipeline (opt-in, ``pipeline_axis=``): uniform single-group decoder stacks
-run their layer scan through ``pipeline.stage_schedule`` inside the same
-shard_map — stage chunks arrive via a ``P(pipeline_axis)`` in_spec on the
-stacked-layer dim (no reshape), activations shift with ppermute, and the
-per-leaf gradient fixup (stage-local chunks / psum'd embedding / replicated
-head) happens before the dp reduction. Tree layout only, but otherwise at
-parity with the flat dp path:
+execute through the schedule-as-data interpreter
+(``pipeline.make_schedule`` + ``pipeline.run_schedule``, DESIGN.md §9)
+inside the same shard_map. ``schedule=`` picks GPipe / 1F1B / interleaved
+(``virtual_stages=V`` round-robins V layer chunks per device); the
+backward is EXPLICIT (per-tick ``jax.vjp`` recompute at the stashed
+input), so nothing is differentiated through the schedule and there is no
+transposed-psum gradient scale to fix up — each leaf class has one
+honest collective:
 
-  * dp gradient compression at (leaf-class × dtype) bucket granularity —
-    stage-local chunks, the embedding, and the head each concat into one
-    flat bucket per dtype, quantize once, and ship ONE compressed
-    all-reduce over the dp axis (EF residual rows live in
-    ``TrainState.grad_err`` keyed by bucket, leading dim = stage·dp device
-    index: each (stage, dp) cell quantizes a DIFFERENT gradient, so its
-    compressor state is its own);
+  * stage chunks: stage-local (disjoint across the pipe axis), reduced
+    over dp only;
+  * embedding: the lookup pullback of the interpreter's ``dxs`` cotangents
+    (nonzero only on stage 0; tied models add the head's embed grad from
+    stage S−1), reduced ONCE over the joint (pipe × dp) axes;
+  * head (final norm + lm head): nonzero only on stage S−1, reduced ONCE
+    over the joint axes.
+
+  The joint-axis reduce IS the embed/head dedup: the legacy engine ran S
+  identical dp all-reduces (one per stage row) plus an uncompressed f32
+  pipe-axis psum — now a single compressed all-reduce with widened replica
+  groups carries each class (S× fewer compressed wire bytes, zero
+  uncompressed gradient traffic; census-gated in BENCH_train_step.json).
+  Collectives launch in bucket-readiness order (``Schedule.comm_ready``:
+  head closes at the last final-chunk Bwd tick, embed at the last chunk-0
+  Bwd tick), matching the overlap cost model in analysis/cost_model.py.
+
+  * dp gradient compression stays at (leaf-class × dtype) bucket
+    granularity (EF residual rows in ``TrainState.grad_err``, leading dim
+    = stage·dp device index: every mesh cell quantizes its OWN partial
+    gradient, so compressor state is per cell);
   * real StepMetrics: the tree-layout optimizer exports RAW per-leaf metric
     partials, the engine psums the stage-local leaves' partials over the
     pipeline axis, adds the replicated leaves' once, and finalizes a single
     time (ops.finalize_metrics) — stage-partial norms combine exactly
     because the partials are plain sums;
-  * MoE aux losses ride the stage schedule (per-tick aux masked to real
-    microbatches, psum'd across stages).
+  * MoE aux losses ride the schedule (per-tick aux masked to scheduled
+    (chunk, micro) backward units, psum'd across stages);
+  * per-micro CE: the interpreter computes each microbatch's head loss at
+    its final-chunk Bwd tick, normalized by that micro's own token count —
+    the same decomposition as train_loop.make_accum_grads.
 
 SR + ZeRO: the counter-based noise stream indexes elements bucket-globally,
 so the per-device body passes ``axis_index · padded/n_dp`` as the
@@ -59,7 +78,7 @@ to SR + dp-replicated (tested at 10 steps in tests/test_sharded_engine.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Union
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +123,8 @@ def _in_groups(path) -> bool:
 # --------------------------------------------------------------------------
 
 def state_pspecs(state: Any, *, axis: Axis, zero_shard: bool,
-                 pipeline_axis: Optional[str] = None) -> Any:
+                 pipeline_axis: Optional[str] = None,
+                 virtual_stages: int = 1) -> Any:
     """PartitionSpecs for a TrainState under the engine.
 
     grad_err leaves shard their leading per-device dim over ``axis`` (in
@@ -112,7 +132,9 @@ def state_pspecs(state: Any, *, axis: Axis, zero_shard: bool,
     quantizes a different gradient bucket, so compressor state is per
     mesh cell, not per dp rank); ZeRO buckets shard their flat axis;
     pipeline mode shards the stacked-layer dim of decoder-group leaves
-    (params and their co-shaped optimizer state) over ``pipeline_axis``;
+    (params and their co-shaped optimizer state) over ``pipeline_axis`` —
+    with ``virtual_stages > 1`` the leaves carry the (V, S, L/(S·V), …)
+    round-robin chunk layout of ``pipeline.split_virtual`` and shard dim 1;
     everything else is replicated."""
     def leaf_fn(path, leaf):
         nd = getattr(leaf, "ndim", 0)
@@ -123,6 +145,8 @@ def state_pspecs(state: Any, *, axis: Axis, zero_shard: bool,
                          *_nones(nd - 1))
             return P(axis, *_nones(nd - 1))
         if pipeline_axis is not None and _in_groups(path) and nd >= 1:
+            if virtual_stages > 1:
+                return P(None, pipeline_axis, *_nones(nd - 2))
             return P(pipeline_axis, *_nones(nd - 1))
         if zero_shard and shard_lib._is_bucket_leaf(path, leaf):
             return P(axis)
@@ -151,21 +175,50 @@ def named_shardings(tree: Any, pspecs: Any, mesh: Mesh) -> Any:
                                   is_leaf=lambda x: isinstance(x, P))
 
 
+def _virtualize(tree: Any, n_stages: int, n_virtual: int) -> Any:
+    """Reshape every decoder-group leaf (and co-shaped optimizer state) of
+    a params-like tree to the (V, S, L/(S·V), …) round-robin chunk layout
+    (pipeline.split_virtual): chunk c = v·S + s at [v, s], so sharding
+    dim 1 over the pipe axis hands device s its interleaved chunks with a
+    uniform +1 ring and no permutation."""
+    C = n_stages * n_virtual
+
+    def fix(path, leaf):
+        if _in_groups(path) and getattr(leaf, "ndim", 0) >= 1:
+            L = leaf.shape[0]
+            assert L % C == 0, (jax.tree_util.keystr(path), L, C)
+            return leaf.reshape(n_virtual, n_stages, L // C, *leaf.shape[1:])
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, tree)
+
+
 def init_state(model: Model, opt: CollageAdamW, key, mesh: Mesh, *,
                axis: Axis = "data", grad_compression: str = "none",
-               pipeline_axis: Optional[str] = None) -> train_loop.TrainState:
+               pipeline_axis: Optional[str] = None,
+               virtual_stages: int = 1) -> train_loop.TrainState:
     """TrainState with one EF-residual row per dp device (see
     train_loop.init_state). In pipeline mode the EF residual is the
     per-(leaf-class × dtype) flat-bucket dict of
-    :func:`pipeline_error_state` instead of the per-leaf tree."""
+    :func:`pipeline_error_state` instead of the per-leaf tree;
+    ``virtual_stages > 1`` stores group leaves in the (V, S, L/(S·V), …)
+    chunk layout (``virtual_stages == 1`` keeps the flat (L, …) layout —
+    checkpoint-compatible with pre-interleaving states)."""
     dtype, use_ef = compression.parse_spec(grad_compression)
     if pipeline_axis is None:
+        if virtual_stages != 1:
+            raise ValueError("virtual_stages requires pipeline_axis")
         return train_loop.init_state(model, opt, key, grad_compression,
                                      n_dp=_axis_size(mesh, axis))
     # pipeline mode: skip the per-leaf residual tree (an (n_dp, …) zero
     # block per parameter leaf that would be discarded immediately) and
     # attach the per-leaf-class bucket rows directly
     state = train_loop.init_state(model, opt, key, "none")
+    if virtual_stages > 1:
+        S = mesh.shape[pipeline_axis]
+        state = train_loop.TrainState(
+            _virtualize(state.params, S, virtual_stages),
+            _virtualize(state.opt_state, S, virtual_stages),
+            state.grad_err)
     if use_ef:
         state = dataclasses.replace(
             state, grad_err=pipeline_error_state(
@@ -219,7 +272,9 @@ def pipeline_error_state(params: Any, n_stages: int, n_dp: int,
             leaf = flat[i][1]
             size = int(leaf.size)
             if _pipeline_leaf_class(flat[i][0]) == "stage":
-                assert leaf.shape[0] % n_stages == 0, (leaf.shape, n_stages)
+                # size-based so both the flat (L, …) and virtual
+                # (V, S, L/(S·V), …) chunk layouts divide
+                assert size % n_stages == 0, (leaf.shape, n_stages)
                 size //= n_stages
             length += size
         rdt = compression.residual_dtype(dtype, flat[idxs[0]][1].dtype)
@@ -228,21 +283,53 @@ def pipeline_error_state(params: Any, n_stages: int, n_dp: int,
 
 
 def _compress_pipeline_grads(grads: Any, err_rows: Optional[dict], dtype,
-                             axis: Axis, n_dp: int):
-    """Bucket-granular EF-compressed dp mean of the (post-stage-fixup)
-    gradient tree: concat each (leaf class × dtype) bucket's leaves flat,
-    ONE quantize → psum → dequantize per bucket, slice the mean back to the
-    leaves. Returns (grads in leaf dtypes, new residual rows or None)."""
+                             axis: Axis, n_dp: int, *,
+                             pipeline_axis: Optional[str] = None,
+                             n_pipe: int = 1,
+                             class_order: Optional[Sequence[str]] = None):
+    """Bucket-granular EF-compressed mean of the per-device gradient tree:
+    concat each (leaf class × dtype) bucket's leaves flat, ONE quantize →
+    psum → dequantize per bucket, slice the mean back to the leaves.
+
+    With ``pipeline_axis``, embed/head buckets reduce over the JOINT
+    (pipe × dp) axes in one collective — their per-device grads are
+    single-origin partials (embed nonzero on stage 0 [+ tied part on
+    stage S−1], head on stage S−1), so the joint psum IS the pipe-sum +
+    dp-sum and dividing by ``n_dp`` yields the dp mean. This is the
+    embed/head dedup: one widened all-reduce instead of S identical
+    per-stage-row dp reduces plus an uncompressed pipe psum. fp8 headroom
+    widens to S·n_dp (every mesh cell ships a payload — zero rows flush
+    their EF residuals through the same reduce). Stage buckets stay
+    dp-only (their grads are stage-local by construction).
+
+    ``class_order`` launches buckets in gradient-readiness order
+    (Schedule.comm_ready — head closes first) so collective k sits next
+    to the work that freed it in program order.
+
+    Returns (grads in leaf dtypes, new residual rows or None)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
     order = _pipeline_bucket_order(flat)
+    keys = list(order)
+    if class_order is not None:
+        rank = {c: r for r, c in enumerate(class_order)}
+        keys.sort(key=lambda k: (rank.get(k.split(":")[0], len(rank)), k))
     new_leaves: list = [None] * len(flat)
     new_rows: Optional[dict] = {} if err_rows is not None else None
-    for key, idxs in order.items():
+    for key in keys:
+        idxs = order[key]
         parts = [flat[i][1].reshape(-1) for i in idxs]
         bucket = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         err = err_rows[key][0] if err_rows is not None else None
+        if pipeline_axis is not None and key.split(":")[0] != "stage":
+            red_axis: Axis = ((pipeline_axis,)
+                              + (axis if isinstance(axis, tuple)
+                                 else (axis,)))
+            headroom: Optional[float] = float(n_pipe * n_dp)
+        else:
+            red_axis, headroom = axis, None
         mean32, resid = compression.pmean_compressed(bucket, err, dtype,
-                                                     axis, n_dp)
+                                                     red_axis, n_dp,
+                                                     headroom=headroom)
         if new_rows is not None:
             new_rows[key] = resid[None]
         off = 0
@@ -256,9 +343,11 @@ def _compress_pipeline_grads(grads: Any, err_rows: Optional[dict], dtype,
 
 def device_put_state(state, mesh: Mesh, *, axis: Axis = "data",
                      zero_shard: bool = False,
-                     pipeline_axis: Optional[str] = None):
+                     pipeline_axis: Optional[str] = None,
+                     virtual_stages: int = 1):
     specs = state_pspecs(state, axis=axis, zero_shard=zero_shard,
-                         pipeline_axis=pipeline_axis)
+                         pipeline_axis=pipeline_axis,
+                         virtual_stages=virtual_stages)
     return jax.device_put(state, named_shardings(state, specs, mesh))
 
 
@@ -292,6 +381,8 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                             grad_compression: str = "none",
                             zero_shard: Optional[bool] = None,
                             pipeline_axis: Optional[str] = None,
+                            schedule: str = "gpipe",
+                            virtual_stages: int = 1,
                             flash_min_len: Optional[int] = None,
                             donate: bool = False,
                             jit: bool = True) -> Callable:
@@ -303,9 +394,16 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
     the layout's pad_multiple to divide (``sharding.bucket_pad_multiple``).
     grad_compression: "none" | "bf16[_ef]" | "fp8[_ef]" — quantizes the
     gradient collective at bucket granularity (bucketed) or per leaf (tree
-    layout); "_ef" keeps the error-feedback residual.
-    pipeline_axis: opt-in GPipe schedule for a uniform single-group decoder
-    stack (tree layout, pre-chunked batches, no compression).
+    layout); "_ef" keeps the error-feedback residual. On the bucketed flat
+    path the per-bucket collective runs through ``step_bucketed``'s
+    ``reduce_fn`` hook, so collective *i* is adjacent to update *i* in
+    program order (bucket-granular readiness → overlap).
+    pipeline_axis: opt-in pipeline parallelism for a uniform single-group
+    decoder stack (tree layout, pre-chunked batches).
+    schedule: "gpipe" | "1f1b" | "interleaved" — the pipeline schedule
+    compiled by pipeline.make_schedule and run by one interpreter.
+    virtual_stages: virtual chunks per device (interleaved only; the
+    TrainState must be built with the same value — init_state).
     flash_min_len: override of ``model.cfg.flash_min_len`` (the flash
     train-path dispatch, models/attention.py). The flash kernels compose
     with shard_map for free: the per-device body sees the LOCAL batch, so
@@ -339,7 +437,10 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                 + (" with fp8 block scaling" if need > n_dp else "")
                 + " — build the BucketPolicy with "
                 "sharding.bucket_pad_multiple(mesh, block=compression.BLOCK)")
-    if pipeline_axis is not None:
+    if pipeline_axis is None:
+        if schedule != "gpipe" or virtual_stages != 1:
+            raise ValueError("schedule/virtual_stages require pipeline_axis")
+    else:
         if bucketed or zero_shard:
             raise ValueError("pipeline mode requires the tree layout")
         if opt.use_fused_kernel:
@@ -348,7 +449,16 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
             # shim re-flattens and reduces per bucket)
             raise ValueError("pipeline mode requires the tree-layout "
                              "optimizer step (use_fused_kernel=False)")
-        _check_pipelinable(model, mesh.shape[pipeline_axis])
+        if schedule not in pp.SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}; "
+                             f"one of {pp.SCHEDULES}")
+        if schedule != "interleaved" and virtual_stages != 1:
+            raise ValueError(f"virtual_stages={virtual_stages} requires "
+                             f"schedule='interleaved' (got {schedule!r})")
+        if schedule == "interleaved" and virtual_stages < 2:
+            raise ValueError("interleaved schedule needs virtual_stages>=2")
+        _check_pipelinable(model,
+                           mesh.shape[pipeline_axis] * virtual_stages)
 
     accum = train_loop.make_accum_grads(model, microbatch=microbatch,
                                         remat=remat)
@@ -377,22 +487,32 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
         if bucketed:
             err_rows = tuple(e[0] for e in opt_state.grad_err) \
                 if use_ef else None
-            if dtype is not None:
-                reducer = compression.psum_scatter_compressed_buckets \
-                    if zero_shard else compression.pmean_compressed_buckets
-                gdata, new_rows = reducer(grads.data, err_rows, dtype,
-                                          axis, n_dp)
-                if use_ef:
-                    opt_state = dataclasses.replace(
-                        opt_state,
-                        grad_err=tuple(r[None] for r in new_rows))
-            elif zero_shard:
-                gdata = tuple(
-                    (jax.lax.psum_scatter(g.astype(jnp.float32), axis,
-                                          scatter_dimension=0, tiled=True)
-                     / n_dp).astype(g.dtype) for g in grads.data)
-            else:
-                gdata = tuple(pmean32(g, axis) for g in grads.data)
+            # Per-bucket readiness → collective launch: each bucket's
+            # reduce (compressed or plain) runs through step_bucketed's
+            # reduce_fn hook, immediately before that bucket's fused
+            # update — collective i is adjacent to update i in program
+            # order, so the scheduler can hide collective i+1 under
+            # update i instead of paying one serialized all-reduce wall
+            # (the modeled win is gated by analysis.cost_model /
+            # benchmarks). Residuals surface via a trace-time list: the
+            # hook runs while the optimizer step traces, so the tracers
+            # are in scope when the new opt state is assembled below.
+            new_rows: list = [None] * params.layout.n_buckets
+
+            def reduce_bucket(i, g):
+                if dtype is not None:
+                    e = err_rows[i] if use_ef else None
+                    red = compression.psum_scatter_compressed if zero_shard \
+                        else compression.pmean_compressed
+                    m, r = red(g, e, dtype, axis, n_dp)
+                    new_rows[i] = r
+                    return m.astype(g.dtype)
+                if zero_shard:
+                    return (jax.lax.psum_scatter(
+                        g.astype(jnp.float32), axis, scatter_dimension=0,
+                        tiled=True) / n_dp).astype(g.dtype)
+                return pmean32(g, axis)
+
             offs = None
             if zero_shard and opt.policy.strategy is Strategy.SR:
                 # counter-based SR under ZeRO: this shard's elements start
@@ -410,13 +530,17 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
                 # definitionally exact, no hand-maintained inverse of the
                 # finalize step
                 new_params, new_opt, parts = opt.step_bucketed(
-                    gdata, params, opt_state, metrics_partials=True,
-                    elem_offsets=offs)
+                    grads.data, params, opt_state, metrics_partials=True,
+                    elem_offsets=offs, reduce_fn=reduce_bucket)
                 om = kops.finalize_metrics(jax.lax.psum(parts, axis),
                                            params.layout.total_size)
             else:
                 new_params, new_opt, om = opt.step_bucketed(
-                    gdata, params, opt_state, elem_offsets=offs)
+                    grads.data, params, opt_state, elem_offsets=offs,
+                    reduce_fn=reduce_bucket)
+            if use_ef and dtype is not None:
+                new_opt = dataclasses.replace(
+                    new_opt, grad_err=tuple(r[None] for r in new_rows))
         else:
             if dtype is not None:
                 # residual leaves carry a per-device dim: strip this
@@ -438,84 +562,115 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
 
     # --------------------------------------------------- pipeline variant --
     S = mesh.shape[pipeline_axis] if pipeline_axis is not None else 1
+    V = virtual_stages
 
     def _pipeline_body(state, batch):
         params = state.params
         cfg = model.cfg
         group = cfg.decoder_program()[0]
+        n_micro = batch["tokens"].shape[0]
+        sched = pp.make_schedule(schedule, n_stages=S, n_micro=n_micro,
+                                 n_virtual=V)
 
-        def stage_body(stage_params, h):
-            return tf.group_apply(stage_params, h, group, cfg, remat=remat)
+        def chunk_body(chunk_p, h):
+            return tf.group_apply(chunk_p, h, group, cfg, remat=remat)
 
-        # Body vs head grads are separated by differentiating two aliases
-        # of the same params: the body path (embedding lookup + stage
-        # schedule) produces stage-LOCAL contributions (nonzero only where
-        # this device computed — stage chunks, and the lookup on stage 0),
-        # while the head path (final norm + lm head, incl. the TIED
-        # embedding when cfg.tie_embeddings) is computed identically on
-        # every stage from the psum-broadcast outputs. A single combined
-        # grad cannot be fixed up post-hoc for tied embeddings (psum would
-        # S-fold the head contribution; pmean would lose (S−1)/S of the
-        # lookup's).
-        def loss_fn(p_body, p_head, chunks):
-            x = embed_lookup(p_body["embed"], chunks["tokens"])
-            n_micro = chunks["tokens"].shape[0]
-            out, aux = pp.stage_schedule(stage_body,
-                                         p_body["decoder"]["groups"][0],
-                                         x, axis=pipeline_axis, n_stages=S,
-                                         with_aux=True)
-            # aux arrives summed over every stage's layers and every real
-            # microbatch (bubble ticks masked out inside the schedule);
-            # /n_micro matches the unpipelined accum's per-chunk average
-            aux = aux / n_micro
-            logits = model._head(p_head, out)     # (n, mb, L, V) fp32
-            ce = model.token_ce(logits, chunks["labels"])
-            return ce + AUX_LOSS_COEF * aux, {"ce": ce, "aux": aux}
+        # Local chunk params with a leading (V, …) chunk dim for the
+        # interpreter. V == 1 keeps the flat stored layout (L/S, …);
+        # V > 1 stores (V, S, L/(S·V), …) sharded on dim 1, locally
+        # (V, 1, Lc, …).
+        g0 = params["decoder"]["groups"][0]
+        if V == 1:
+            chunk_params = jax.tree_util.tree_map(lambda p: p[None], g0)
+        else:
+            chunk_params = jax.tree_util.tree_map(lambda p: p[:, 0], g0)
 
-        (loss, lmetrics), (g_body, g_head) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1), has_aux=True)(params, params, batch)
+        # Head = final norm + lm head (the TIED embedding when
+        # cfg.tie_embeddings); computed ONLY at final-chunk Bwd ticks
+        # inside the interpreter — head grads are single-origin (stage
+        # S−1), not replicated, so their collective is one joint-axis
+        # reduce, never an S-fold.
+        tied = cfg.tie_embeddings
+        head_params = {"norm": params["decoder"]["final_norm"],
+                       "w": params["embed"] if tied else params["lm_head"]}
 
-        inv_S = jnp.float32(1.0 / S)
+        def head_loss_fn(hp, y, lab):
+            pseudo = {"decoder": {"final_norm": hp["norm"]},
+                      ("embed" if tied else "lm_head"): hp["w"]}
+            return model.token_ce(model._head(pseudo, y), lab)
 
-        def fix_body(path, g):
-            # the schedule's closing psum transposes to psum under
-            # check_rep=False: every stage's (identical) loss cotangent
-            # into `out` is SUMMED on the way back, so every body-path
-            # gradient arrives S-fold. Rescale to the true gradient —
-            # exact for power-of-two stage counts. The old engine shipped
-            # the S× scale silently: Adam's per-element scale invariance
-            # hid it from the params-parity tests, but ‖g‖²-based
-            # StepMetrics (and any non-scale-invariant consumer) see it.
-            g = (g.astype(jnp.float32) * inv_S).astype(g.dtype)
-            if _in_groups(path):
-                return g                          # stage-local chunk
-            # embedding lookup: only stage 0 feeds activations in → psum
-            # recovers the total (all other body leaves are zero here)
-            return jax.lax.psum(g, pipeline_axis)
+        xs = embed_lookup(params["embed"], batch["tokens"])
+        out = pp.run_schedule(sched, chunk_body, head_loss_fn,
+                              chunk_params, head_params, xs,
+                              batch["labels"], axis=pipeline_axis)
 
-        def fix_head(g):
-            # identical on every stage — pmean is a numerical no-op (S is
-            # a power of two) that tolerates any per-stage drift
-            return jax.lax.pmean(g, pipeline_axis)
+        # Embedding grad: pull the interpreter's dxs cotangents (nonzero
+        # only on the chunk-0 device) back through the lookup; the tied
+        # head contribution (nonzero only on stage S−1) adds in f32. The
+        # joint (pipe × dp) reduce below recovers the total — no leaf is
+        # ever replicated-then-summed, so no 1/S fixup exists on this
+        # path (contrast stage_schedule's transposed psum, DESIGN.md §9).
+        (g_embed,) = jax.vjp(
+            lambda emb: embed_lookup(emb, batch["tokens"]),
+            params["embed"])[1](out["dxs"].astype(xs.dtype))
+        if tied:
+            # the head contribution adds in f32 (the tied leaf is the one
+            # place two gradient paths meet); untied keeps the pullback's
+            # stored dtype — widening here would be a pure double-round
+            g_embed = (g_embed.astype(jnp.float32)
+                       + out["g_head"]["w"]).astype(params["embed"].dtype)
 
-        grads = jax.tree_util.tree_map(
-            lambda a, b: (a.astype(jnp.float32)
-                          + b.astype(jnp.float32)).astype(a.dtype),
-            jax.tree_util.tree_map_with_path(fix_body, g_body),
-            jax.tree_util.tree_map(fix_head, g_head))
+        def to_stored(g, p):
+            g = g[0] if V == 1 else g[:, None]
+            return g.astype(p.dtype)
+
+        grads = {
+            "embed": g_embed,
+            "decoder": {
+                "groups": [jax.tree_util.tree_map(to_stored,
+                                                  out["g_chunks"], g0)],
+                "final_norm": out["g_head"]["norm"].astype(
+                    params["decoder"]["final_norm"].dtype),
+            },
+        }
+        if not tied:
+            grads["lm_head"] = out["g_head"]["w"].astype(
+                params["lm_head"].dtype)
+
+        # collectives in bucket-readiness order (head closes first: its
+        # last contributing Bwd tick precedes the stage/embed closes)
+        class_order = sorted(sched.comm_ready,
+                             key=lambda c: sched.comm_ready[c])
         grad_err = state.grad_err
+        joint_axis = (pipeline_axis,) + (axis if isinstance(axis, tuple)
+                                         else (axis,))
         if dtype is not None:
-            # dp reduction at (leaf class × dtype) bucket granularity: ONE
-            # compressed all-reduce per bucket (stage chunks / embed / head)
+            # (leaf class × dtype) bucket granularity: ONE compressed
+            # all-reduce per bucket — stage over dp, embed/head over the
+            # joint (pipe × dp) axes (the dedup: no per-stage-row
+            # repetition, no uncompressed pipe psum)
             grads, new_rows = _compress_pipeline_grads(
-                grads, grad_err if use_ef else None, dtype, axis, n_dp)
+                grads, grad_err if use_ef else None, dtype, axis, n_dp,
+                pipeline_axis=pipeline_axis, n_pipe=S,
+                class_order=class_order)
             if use_ef:
                 grad_err = new_rows
         else:
-            grads = jax.tree_util.tree_map(lambda g: pmean32(g, axis), grads)
-        loss = jax.lax.pmean(loss, axis)
-        lmetrics = {k: jax.lax.pmean(lmetrics[k], axis)
-                    for k in ("ce", "aux")}
+            def reduce_leaf(path, g):
+                if _pipeline_leaf_class(path) == "stage":
+                    return pmean32(g, axis)
+                return (jax.lax.psum(g.astype(jnp.float32), joint_axis)
+                        / n_dp).astype(g.dtype)
+            grads = jax.tree_util.tree_map_with_path(reduce_leaf, grads)
+
+        # loss decomposition: ce/aux are SUMS over micros on their owning
+        # devices — psum over pipe, /n_micro (per-micro CE matches the
+        # unpipelined accum's microbatch decomposition)
+        ce = jax.lax.psum(out["ce"], pipeline_axis) / n_micro
+        aux = jax.lax.psum(out["aux"], pipeline_axis) / n_micro
+        loss = jax.lax.pmean(ce + AUX_LOSS_COEF * aux, axis)
+        lmetrics = {"ce": jax.lax.pmean(ce, axis),
+                    "aux": jax.lax.pmean(aux, axis)}
         if opt.compute_metrics:
             # real StepMetrics: raw per-leaf partials, stage-local leaves
             # psum'd over the pipeline axis (disjoint chunks sum exactly),
@@ -549,7 +704,8 @@ def make_sharded_train_step(model: Model, opt: CollageAdamW, mesh: Mesh, *,
     # ------------------------------------------------------------ wrapper --
     def step(state, batch):
         sspecs = state_pspecs(state, axis=axis, zero_shard=zero_shard,
-                              pipeline_axis=pipeline_axis)
+                              pipeline_axis=pipeline_axis,
+                              virtual_stages=virtual_stages)
         bspecs = batch_pspecs(batch, axis=axis)
         mspecs = {k: P() for k in _METRIC_KEYS}
         fn = shard_map(body, mesh=mesh, in_specs=(sspecs, bspecs),
