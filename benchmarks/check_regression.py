@@ -23,6 +23,13 @@ contract:
   BENCH_decode        flat temp arena across generation lengths (zero
                       per-step cache realloc), donated-step alias bytes
                       covering the cache;
+  BENCH_serving       continuous-batching contract on a seeded virtual-
+                      clock trace: goodput above the closed-batch engine,
+                      greedy token-stream parity, one decode-segment
+                      executable + ≤ one prefill executable per prompt
+                      bucket, slot reuse under churn, seg-len-flat and
+                      arena-aliasing segment temp memory, queueing-delay
+                      percentiles (virtual clock, machine-independent);
   BENCH_precision_audit  the no-master-copy invariant per (config ×
                       strategy × mode) cell (zero parameter-shaped f32
                       live across steps for 16-bit strategies, the D
@@ -199,6 +206,64 @@ def check_decode(cur: dict, base: dict) -> list:
     return out
 
 
+def check_serving(cur: dict, base: dict) -> list:
+    """Continuous-batching serving contract (benchmarks/decode.py
+    --serving). Everything gated is a property of the scheduler/compiled
+    programs on a SEEDED virtual-clock trace, so it is machine-independent:
+    goodput vs the closed baseline and token-stream parity are recomputed
+    from the artifact's own numbers (not trusted from flags), compile
+    counts and slot reuse are zero-tolerance counts, the segment temp
+    arena must stay flat in seg_len and alias the donated slot arena, and
+    queueing-delay percentiles come from the virtual clock. Wall-clock
+    fields are never gated."""
+    out: list = []
+    c_cont, c_closed = cur.get("continuous", {}), cur.get("closed", {})
+    b_cont = base.get("continuous", {})
+    _viol(out, c_cont.get("goodput", 0) > c_closed.get("goodput", 1),
+          f"serving: continuous goodput {c_cont.get('goodput')} does not "
+          f"beat closed-batch {c_closed.get('goodput')} on the same trace")
+    _viol(out, c_cont.get("goodput", 0)
+          >= b_cont.get("goodput", 0) / SIZE_TOL,
+          f"serving: continuous goodput {c_cont.get('goodput')} fell below "
+          f"baseline {b_cont.get('goodput')}/{SIZE_TOL}")
+    _viol(out, c_cont.get("tokens_real", -1)
+          == c_closed.get("tokens_generated", -2),
+          f"serving: continuous real tokens {c_cont.get('tokens_real')} != "
+          f"closed {c_closed.get('tokens_generated')} — greedy streams "
+          f"diverged on the same trace+key")
+    _viol(out, c_cont.get("decode_traces", 99) == 1,
+          f"serving: {c_cont.get('decode_traces')} decode-segment "
+          f"executables (must be exactly 1 — churn is recompiling)")
+    _viol(out, c_cont.get("prefill_traces", 99)
+          <= cur.get("n_prompt_buckets", 0),
+          f"serving: {c_cont.get('prefill_traces')} prefill executables > "
+          f"{cur.get('n_prompt_buckets')} prompt buckets")
+    _viol(out, c_cont.get("slot_reuse", 0) > 0,
+          "serving: no slot was ever reused — retirement/refill between "
+          "segments is not happening")
+    _viol(out, cur.get("seg_temp_bytes_long", 1)
+          <= cur.get("seg_temp_bytes_short", 0) * 1.01,
+          f"serving: segment temp arena grows with seg_len "
+          f"({cur.get('seg_temp_bytes_short')} → "
+          f"{cur.get('seg_temp_bytes_long')} B) — per-step realloc is back")
+    _viol(out, cur.get("seg_alias_bytes", 0)
+          >= cur.get("slot_arena_bytes", 1),
+          f"serving: segment aliases {cur.get('seg_alias_bytes')} B < slot "
+          f"arena {cur.get('slot_arena_bytes')} B — the pool is being "
+          f"copied, not reused, across segments")
+    _viol(out, cur.get("seg_temp_bytes_short", 1)
+          <= base.get("seg_temp_bytes_short", 0) * SIZE_TOL,
+          f"serving: segment temp arena {cur.get('seg_temp_bytes_short')} B"
+          f" > baseline {base.get('seg_temp_bytes_short')}×{SIZE_TOL}")
+    for pct in ("delay_p50", "delay_p99"):
+        _viol(out, c_cont.get(pct, float("inf"))
+              <= b_cont.get(pct, 0) * SIZE_TOL,
+              f"serving: virtual-clock {pct} {c_cont.get(pct)} > baseline "
+              f"{b_cont.get(pct)}×{SIZE_TOL} — queueing regressed")
+    _check_ok_flags(cur, base, out, "serving")
+    return out
+
+
 def check_precision_audit(cur: dict, base: dict) -> list:
     """Static-audit artifact (scripts/precision_audit.py). Everything gated
     here is a property of the lowered IR: the no-master-copy invariant and
@@ -258,6 +323,7 @@ CHECKS = {
     "BENCH_attention.json": check_attention,
     "BENCH_optimizer_step.json": check_optimizer_step,
     "BENCH_decode.json": check_decode,
+    "BENCH_serving.json": check_serving,
 }
 
 

@@ -18,6 +18,18 @@ step must alias its cache buffers.
   PYTHONPATH=src python -m benchmarks.decode [--quick]
 
 Emits BENCH_decode.json.
+
+``--serving`` switches to the open-stream traffic simulator: a seeded
+Poisson trace of mixed prompt/gen-length requests (+ per-request EOS) is
+served by BOTH the closed-batch GenerationEngine and the slot-pool
+ContinuousEngine, and BENCH_serving.json records the structural contract
+of continuous batching — goodput above the closed baseline on the same
+trace, bit-parity of the greedy token streams, exactly one decode-segment
+executable + one prefill executable per prompt bucket, slot reuse under
+churn, a flat (seg-len-independent, arena-aliasing) segment temp arena,
+and virtual-clock queueing-delay percentiles (wall-clock informational).
+
+  PYTHONPATH=src python -m benchmarks.decode --serving [--quick]
 """
 from __future__ import annotations
 
@@ -28,9 +40,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticCorpus
+from repro.launch.serve import (ContinuousEngine, GenerationEngine, Request,
+                                _bucket_len)
 from repro.models.model import build_model
 
 
@@ -60,6 +75,137 @@ def make_python_loop(model, params, batch, gen: int, cache_len: int,
     return run
 
 
+def serving_main(args):
+    """Open-stream traffic simulator → BENCH_serving.json."""
+    cfg = get_config(args.arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eos_id, pad_id = 1, 0
+
+    # seeded mixed trace: ragged prompts, per-request gen budgets spanning
+    # gen_lo..gen (the churn driver), Poisson arrivals on the virtual clock
+    N = 24 if args.quick else 64
+    gen_lo, gen_hi = 4, (32 if args.quick else args.gen * 2)
+    prompt_hi = 16 if args.quick else args.prompt_len
+    slots = 4 if args.quick else 8
+    seg_len = 8 if args.quick else 16
+    prefill_batch = 2 if args.quick else 4
+    rng = np.random.default_rng(args.seed)
+    requests, arrival = [], 0.0
+    for _ in range(N):
+        L = int(rng.integers(max(prompt_hi // 2, 1), prompt_hi + 1))
+        if model._has_recurrent_state():
+            L = prompt_hi
+        g = int(rng.integers(gen_lo, gen_hi + 1))
+        arrival += float(rng.exponential(1.0 / 2.0))   # ~2 arrivals / tick:
+        requests.append(Request(                       # keeps the pool fed
+            tokens=rng.integers(2, cfg.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=g, arrival=arrival))
+    results = {"arch": cfg.name, "requests": N, "gen_lo": gen_lo,
+               "gen_hi": gen_hi, "prompt_hi": prompt_hi, "seed": args.seed}
+
+    # --- closed-batch baseline on the SAME trace --------------------------
+    closed = GenerationEngine(model, params, max_batch=slots,
+                              eos_id=eos_id, pad_id=pad_id)
+    t0 = time.time()
+    outs_closed = closed.generate(requests, gen_hi,
+                                  key=jax.random.PRNGKey(args.seed + 1))
+    results["closed"] = {
+        "wall_s": time.time() - t0,           # informational only
+        "tokens_generated": closed.stats["tokens_generated"],
+        "tokens_padded": closed.stats["tokens_padded"],
+        "goodput": closed.goodput,
+        "traces": closed.compile_count,
+    }
+
+    # --- continuous engine ------------------------------------------------
+    cache_len = _bucket_len(prompt_hi) + gen_hi + model._prefix_len
+    cont = ContinuousEngine(model, params, cache_len=cache_len,
+                            max_slots=slots, seg_len=seg_len,
+                            prefill_batch=prefill_batch, eos_id=eos_id,
+                            pad_id=pad_id, seed=args.seed)
+    t0 = time.time()
+    outs_cont, report = cont.serve(requests, gen_hi,
+                                   key=jax.random.PRNGKey(args.seed + 1))
+    report["wall_s"] = time.time() - t0       # informational only
+    results["continuous"] = report
+
+    # greedy bit-parity: for every request the continuous stream must equal
+    # the closed row truncated to its real (EOS/budget-capped) length
+    parity = True
+    for i, r in enumerate(requests):
+        b = min(r.max_new_tokens, gen_hi)
+        want = np.asarray(outs_closed[i][:closed._real_len(outs_closed[i], b)])
+        got = outs_cont[i]
+        if len(want) != len(got) or not (want == got).all():
+            parity = False
+            break
+
+    # flat segment arena: the ONE decode-segment executable must (a) not
+    # grow its temp arena with seg_len (no per-step cache realloc) and
+    # (b) alias the donated slot arena (segments reuse the pool in place —
+    # the across-segments memory contract)
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    slots_abs = jax.eval_shape(
+        lambda: model.init_slot_state(slots, cache_len))
+    arena_bytes = _cache_bytes(slots_abs)
+
+    def seg_compiled(sl):
+        fn = jax.jit(functools.partial(model.decode_segment, seg_len=sl,
+                                       eos_id=eos_id, pad_id=pad_id),
+                     donate_argnums=(1,))
+        return fn.lower(params_abs, slots_abs,
+                        jax.random.PRNGKey(0)).compile()
+
+    c_short, c_long = seg_compiled(seg_len), seg_compiled(2 * seg_len)
+    t_short = int(c_short.memory_analysis().temp_size_in_bytes)
+    t_long = int(c_long.memory_analysis().temp_size_in_bytes)
+    alias = int(c_short.memory_analysis().alias_size_in_bytes)
+    results["seg_temp_bytes_short"] = t_short
+    results["seg_temp_bytes_long"] = t_long
+    results["seg_alias_bytes"] = alias
+    results["slot_arena_bytes"] = arena_bytes
+
+    n_buckets = len({cont._bucket(len(r.tokens)) for r in requests})
+    results["n_prompt_buckets"] = n_buckets
+    results["ok"] = {
+        "goodput_beats_closed": report["goodput"]
+        > results["closed"]["goodput"],
+        "parity_with_closed": parity,
+        "single_decode_trace": report["decode_traces"] == 1,
+        "prefill_traces_bounded": report["prefill_traces"] <= n_buckets,
+        "slot_reuse_under_churn": report["slot_reuse"] > 0,
+        "seg_temp_flat": (t_long - t_short)
+        < 0.5 * seg_len * arena_bytes,
+        "seg_aliases_arena": alias >= arena_bytes,
+        "tokens_match_closed": report["tokens_real"]
+        == results["closed"]["tokens_generated"],
+    }
+    bad = sorted(k for k, v in results["ok"].items() if not v)
+    assert not bad, f"serving structural contract failed: {bad}"
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"trace         : {N} requests, gens {gen_lo}–{gen_hi}, prompts "
+          f"≤{prompt_hi}, Poisson arrivals (seed {args.seed})")
+    print(f"closed        : goodput {results['closed']['goodput']:.3f} "
+          f"({results['closed']['tokens_generated']} real / "
+          f"{results['closed']['tokens_padded']} padded), "
+          f"{results['closed']['traces']} traces, "
+          f"{results['closed']['wall_s']*1e3:.0f} ms")
+    print(f"continuous    : goodput {report['goodput']:.3f} "
+          f"({report['tokens_real']} real / {report['token_slots']} slots), "
+          f"{report['prefill_traces']}+{report['decode_traces']} traces, "
+          f"slot reuse {report['slot_reuse']}, "
+          f"{report['wall_s']*1e3:.0f} ms")
+    print(f"queueing delay: p50 {report['delay_p50']:.1f}  "
+          f"p99 {report['delay_p99']:.1f} virtual ticks")
+    print(f"segment arena : {t_short} B @ seg={seg_len} → {t_long} B @ "
+          f"seg={2*seg_len}, aliases {alias} B ≥ arena {arena_bytes} B")
+    print(f"wrote {args.out}")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-tiny")
@@ -68,8 +214,17 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serving", action="store_true",
+                    help="run the open-stream traffic simulator instead "
+                         "(emits BENCH_serving.json)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "BENCH_serving.json" if args.serving else \
+            "BENCH_decode.json"
+    if args.serving:
+        return serving_main(args)
     if args.quick:
         args.gen, args.reps = 32, 2
 

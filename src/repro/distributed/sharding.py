@@ -216,6 +216,14 @@ def cache_shardings(abstract_caches: Any, mesh: Mesh,
         if name == "pos" and leaf.ndim == 1:        # DecodeState.pos (B,)
             bshard = dp if leaf.shape[0] % n_dp == 0 else None
             return NamedSharding(mesh, P(bshard))
+        # SlotState per-slot bookkeeping: slots co-shard with batch rows
+        if (name in ("active", "done", "n_gen", "budget")
+                and leaf.ndim == 1):                # SlotState.* (max_slots,)
+            bshard = dp if leaf.shape[0] % n_dp == 0 else None
+            return NamedSharding(mesh, P(bshard))
+        if name == "tok" and leaf.ndim == 2:        # SlotState.tok (slots, 1)
+            bshard = dp if leaf.shape[0] % n_dp == 0 else None
+            return NamedSharding(mesh, P(bshard, None))
         bdim = leaf.shape[1] if leaf.ndim > 1 else 1
         bshard = dp if (leaf.ndim > 1 and bdim % n_dp == 0) else None
         if name in ("k", "v") and leaf.ndim == 5:   # (layers, B, S, hk, dh)

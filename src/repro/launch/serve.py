@@ -1,22 +1,36 @@
-"""Serving launcher: jit-resident generation engine with request batching.
+"""Serving launcher: jit-resident generation engines with request batching.
 
-The engine (DESIGN.md §6) wraps ``Model.generate`` — the whole decode loop
-(prefill + lax.scan over tokens + in-jit sampling) is ONE jitted program
-per (batch, prompt-bucket, gen-length) shape, with the DecodeState donated
-between calls' scan iterations. Ragged requests are grouped and padded to
-power-of-two prompt buckets (exact lengths for recurrent-state archs, whose
-states would ingest pad tokens), so the compile count stays bounded while
-arbitrary-length traffic is served.
+Two engines share the model's jit-resident decode seam (DESIGN.md §6/§10):
+
+* ``GenerationEngine`` — CLOSED-batch: a fixed request list is bucketed,
+  padded, and each batch runs ``Model.generate`` to its full gen length in
+  one jitted program. EOS / per-request budgets freeze finished rows, but
+  their scan slots are still paid for — the engine now reports
+  ``tokens_generated`` vs ``tokens_padded`` so that cost is measurable.
+* ``ContinuousEngine`` — OPEN-stream continuous batching: a fixed
+  ``(max_slots, cache_len)`` slot-pool KV arena (``Model.SlotState``)
+  driven by a host scheduler that interleaves bucketed prefill launches
+  (``prefill_into`` scatters new rows into free slots) with fixed-shape
+  ``decode_segment`` launches, retiring finished rows and refilling their
+  slots BETWEEN segments — no recompile under churn; admission is
+  controlled by a token budget; outputs stream per request as rows finish.
+
+Compile count stays bounded in both: one executable per prompt bucket
+(prefill / closed-batch generate) plus exactly one decode-segment program.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
       --requests 16 --gen 32 --temperature 0.8 --top-k 40
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
+      --continuous --requests 32 --slots 8 --seg-len 8 --arrival-rate 0.5
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
-from typing import Optional, Sequence
+from collections import deque
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,10 +44,14 @@ from repro.models.model import Model, build_model
 @dataclasses.dataclass
 class Request:
     """One generation request: a token prompt (+ precomputed frontend
-    embeddings for VLM/enc-dec archs)."""
+    embeddings for VLM/enc-dec archs). ``max_new_tokens`` caps THIS
+    request's generation (None = the engine call's gen length); ``arrival``
+    is the virtual-clock arrival tick (open-stream serving only)."""
 
     tokens: np.ndarray                       # (L,) int32
     frontend: Optional[np.ndarray] = None    # (F, D) model dtype
+    max_new_tokens: Optional[int] = None
+    arrival: float = 0.0
 
 
 def _bucket_len(n: int, lo: int = 8) -> int:
@@ -41,6 +59,51 @@ def _bucket_len(n: int, lo: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+class SlotPool:
+    """Host-side free/alloc bitmap for the slot arena.
+
+    Pure bookkeeping — the device-side liveness lives in
+    ``SlotState.active/done``; this class decides WHICH slot a new request
+    lands in and guards the scheduler invariants (no double-alloc, no
+    double-free, no lost slots), which ``tests/test_slot_pool.py`` hammers
+    under randomized churn."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))   # lowest slot first
+        self._live: set = set()
+        self._used: set = set()
+        self.allocs = 0                                  # lifetime counter
+        self.reuses = 0                # allocs that recycled a retired slot
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> frozenset:
+        return frozenset(self._live)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("SlotPool.alloc on a full pool")
+        s = self._free.pop()
+        self._live.add(s)
+        if s in self._used:
+            self.reuses += 1
+        self._used.add(s)
+        self.allocs += 1
+        return s
+
+    def release(self, slot: int):
+        if slot not in self._live:
+            raise RuntimeError(f"SlotPool.release of non-live slot {slot}")
+        self._live.remove(slot)
+        self._free.append(slot)
 
 
 class GenerationEngine:
@@ -59,7 +122,8 @@ class GenerationEngine:
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  temperature: float = 0.0, top_k: int = 0, pad_id: int = 0,
-                 pad_batches: bool = True, seed: int = 0):
+                 eos_id: Optional[int] = None, pad_batches: bool = True,
+                 seed: int = 0):
         self.model = model
         self.params = params
         self.seed = seed
@@ -69,6 +133,11 @@ class GenerationEngine:
         self._temperature = float(temperature)
         self._top_k = int(top_k)
         self.pad_id = pad_id
+        if eos_id is not None and eos_id == pad_id:
+            raise ValueError(
+                f"eos_id == pad_id ({eos_id}): finished rows emit pad_id, "
+                f"so the host could not find the EOS position in outputs")
+        self.eos_id = eos_id
         # pad residual groups (B < max_batch) with dummy rows so every call
         # shares the (max_batch, bucket) shape — one compile per
         # (bucket, gen), not one per distinct residual size
@@ -77,7 +146,11 @@ class GenerationEngine:
         self._needs_frontend = (model.cfg.family == "vlm"
                                 or model.cfg.is_encdec)
         self._fns: dict = {}
-        self.stats = {"batches": 0, "tokens": 0, "traces": 0}
+        # tokens_generated = real (pre-EOS / in-budget) tokens on real rows;
+        # tokens_padded = scan slots burned on finished/dummy rows — the
+        # goodput split continuous batching exists to fix
+        self.stats = {"batches": 0, "tokens_generated": 0,
+                      "tokens_padded": 0, "traces": 0}
 
     @property
     def temperature(self) -> float:
@@ -92,13 +165,15 @@ class GenerationEngine:
     def _fn(self, max_new: int):
         fn = self._fns.get(max_new)
         if fn is None:
-            def counted(params, batch, key, prompt_lens=None, *, _n=max_new):
+            def counted(params, batch, key, prompt_lens=None, gen_lens=None,
+                        *, _n=max_new):
                 self.stats["traces"] += 1    # Python side effect: runs only
                 #                              when jit actually re-traces
                 return self.model.generate(
                     params, batch, _n, key=key,
                     temperature=self._temperature, top_k=self._top_k,
-                    prompt_lens=prompt_lens)
+                    prompt_lens=prompt_lens, gen_lens=gen_lens,
+                    eos_id=self.eos_id, pad_id=self.pad_id)
             fn = jax.jit(counted)
             self._fns[max_new] = fn
         return fn
@@ -148,6 +223,12 @@ class GenerationEngine:
                     f"request {i}: frontend given for a text-only arch")
         order = sorted(range(len(requests)),
                        key=lambda i: len(requests[i].tokens))
+        budgets = [min(r.max_new_tokens or max_new_tokens, max_new_tokens)
+                   for r in requests]
+        # per-request budgets / EOS engage the masked scan; otherwise the
+        # legacy un-masked trace is reused bit-identically
+        masked = (self.eos_id is not None
+                  or any(b != max_new_tokens for b in budgets))
         out: list = [None] * len(requests)
         pending = []
         for gi, (bucket, idxs) in enumerate(self._group(order, requests)):
@@ -155,10 +236,12 @@ class GenerationEngine:
             Bp = self.max_batch if self.pad_batches else B
             toks = np.full((Bp, bucket), self.pad_id, np.int32)
             lens = np.full((Bp,), bucket, np.int32)   # dummy rows full-length
+            buds = np.ones((Bp,), np.int32)           # dummy rows: 1 token
             for r, i in enumerate(idxs):
                 t = np.asarray(requests[i].tokens, np.int32)
                 toks[r, :len(t)] = t
                 lens[r] = len(t)
+                buds[r] = budgets[i]
             batch = {"tokens": jnp.asarray(toks)}
             if self._needs_frontend:
                 fes = [jnp.asarray(requests[i].frontend) for i in idxs]
@@ -167,17 +250,324 @@ class GenerationEngine:
             ragged = None if (lens == bucket).all() else jnp.asarray(lens)
             gen, _ = self._fn(max_new_tokens)(
                 self.params, batch, key=jax.random.fold_in(key, gi),
-                prompt_lens=ragged)
-            pending.append((idxs, gen))   # host-sync AFTER all groups are
+                prompt_lens=ragged,
+                gen_lens=jnp.asarray(buds) if masked else None)
+            pending.append((idxs, Bp, gen))  # host-sync AFTER all groups are
             #                               dispatched — keeps XLA's async
             #                               dispatch pipelining the groups
             self.stats["batches"] += 1
-            self.stats["tokens"] += B * max_new_tokens
-        for idxs, gen in pending:
+        for idxs, Bp, gen in pending:
             gen = np.asarray(gen)
+            real = 0
             for r, i in enumerate(idxs):
                 out[i] = gen[r]
+                real += self._real_len(gen[r], budgets[i])
+            self.stats["tokens_generated"] += real
+            self.stats["tokens_padded"] += Bp * max_new_tokens - real
         return out
+
+    def _real_len(self, row: np.ndarray, budget: int) -> int:
+        """User-visible token count of an output row: up to and including
+        the first EOS, capped by the request's budget."""
+        if self.eos_id is not None:
+            hits = np.flatnonzero(row[:budget] == self.eos_id)
+            if hits.size:
+                return int(hits[0]) + 1
+        return int(budget)
+
+    @property
+    def goodput(self) -> float:
+        """Real generated tokens / generation scan slots computed — the
+        padding fraction is what continuous batching recycles."""
+        total = self.stats["tokens_generated"] + self.stats["tokens_padded"]
+        return self.stats["tokens_generated"] / max(total, 1)
+
+
+class ContinuousEngine:
+    """In-flight continuous batching over a slot-pool KV arena.
+
+    The device side is two fixed-shape jitted programs — ``prefill_into``
+    (one executable per prompt bucket, new rows scattered into free slots)
+    and ``decode_segment`` (exactly one executable, advances ALL slots
+    ``seg_len`` steps) — so compiles are bounded by the bucket grid no
+    matter how requests churn. The host side is this scheduler:
+
+      1. arrivals (virtual clock, ``Request.arrival`` ticks) join a FIFO
+      2. admission: the queue head is admitted while a slot is free AND
+         ``reserved + (F + bucket + budget) <= token_budget`` — strict FIFO
+         so admission control never starves a long request
+      3. admitted requests are grouped per prompt bucket into prefill
+         launches of a FIXED batch (padded with dummy rows whose
+         ``slot_idx = max_slots`` scatters are dropped out-of-bounds)
+      4. one decode segment advances the pool; finished rows (EOS /
+         budget) are retired BETWEEN segments, their slots released and
+         refilled by step 2 on the next loop — no recompile
+
+    The virtual clock charges ``seg_len`` ticks per decode segment (one
+    tick ≡ one decode step) and ``ceil(bucket / seg_len)`` per prefill
+    launch (prefill is token-parallel, so a whole bucket costs about one
+    segment's wall time); queueing-delay percentiles in the report use
+    this clock, keeping the benchmark gate hardware-independent.
+
+    Outputs stream: ``on_token(req_idx, token)`` fires per real decoded
+    token, ``on_complete(req_idx, tokens)`` when a row retires.
+    """
+
+    def __init__(self, model: Model, params, *, cache_len: int,
+                 max_slots: int = 8, seg_len: int = 8,
+                 prefill_batch: int = 2, token_budget: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 pad_id: int = 0, eos_id: Optional[int] = None,
+                 seed: int = 0):
+        if max_slots <= 0 or seg_len <= 0 or prefill_batch <= 0:
+            raise ValueError("max_slots, seg_len, prefill_batch must be > 0")
+        if eos_id is not None and eos_id == pad_id:
+            raise ValueError(
+                f"eos_id == pad_id ({eos_id}): finished slots emit pad_id, "
+                f"so streamed outputs could not be disambiguated")
+        self.model = model
+        self.params = params
+        self.cache_len = int(cache_len)
+        self.max_slots = int(max_slots)
+        self.seg_len = int(seg_len)
+        self.prefill_batch = int(prefill_batch)
+        # admission reservation cap: Σ_live (frontend + bucket + budget)
+        self.token_budget = (int(token_budget) if token_budget is not None
+                             else self.max_slots * self.cache_len)
+        self._temperature = float(temperature)
+        self._top_k = int(top_k)
+        self.pad_id = pad_id
+        self.eos_id = eos_id
+        self.seed = seed
+        self._calls = 0
+        self._exact_lens = model._has_recurrent_state()
+        self._needs_frontend = (model.cfg.family == "vlm"
+                                or model.cfg.is_encdec)
+        self._prefills: dict = {}
+        self._seg = None
+        self.stats = {"prefill_launches": 0, "segments": 0,
+                      "prefill_slot_rows": 0, "decode_slot_steps": 0,
+                      "tokens_real": 0, "slot_allocs": 0, "max_reserved": 0,
+                      "prefill_traces": 0, "decode_traces": 0}
+
+    # ------------------------------------------------------ jitted seams --
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefills.get(bucket)
+        if fn is None:
+            def counted(params, slots, batch, slot_idx, budget, key,
+                        prompt_lens=None):
+                self.stats["prefill_traces"] += 1
+                return self.model.prefill_into(
+                    params, slots, batch, slot_idx, budget, key,
+                    cache_len=self.cache_len, prompt_lens=prompt_lens,
+                    temperature=self._temperature, top_k=self._top_k,
+                    eos_id=self.eos_id)
+            fn = jax.jit(counted, donate_argnums=(1,))
+            self._prefills[bucket] = fn
+        return fn
+
+    def _seg_fn(self):
+        if self._seg is None:
+            def counted(params, slots, key):
+                self.stats["decode_traces"] += 1
+                return self.model.decode_segment(
+                    params, slots, key, seg_len=self.seg_len,
+                    temperature=self._temperature, top_k=self._top_k,
+                    eos_id=self.eos_id, pad_id=self.pad_id)
+            self._seg = jax.jit(counted, donate_argnums=(1,))
+        return self._seg
+
+    @property
+    def compile_count(self) -> int:
+        return self.stats["prefill_traces"] + self.stats["decode_traces"]
+
+    def _bucket(self, n: int) -> int:
+        return n if self._exact_lens else _bucket_len(n)
+
+    # -------------------------------------------------------- the server --
+    def serve(self, requests: Sequence[Request], max_new_tokens: int, *,
+              key=None, on_token: Optional[Callable[[int, int], None]] = None,
+              on_complete: Optional[Callable[[int, np.ndarray], None]] = None):
+        """Run an open-stream trace to completion.
+
+        Returns ``(outputs, report)``: per-request np arrays of REAL
+        generated tokens (variable length — up to and including EOS, capped
+        by the request budget), in input order, plus a report dict with
+        goodput, virtual-clock queueing-delay percentiles, and the
+        structural counters the serving benchmark gates on."""
+        if key is None:
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                     self._calls)
+        self._calls += 1
+        n = len(requests)
+        F = self.model._prefix_len
+        budgets, resv = [], []
+        for i, r in enumerate(requests):
+            if self._needs_frontend and r.frontend is None:
+                raise ValueError(f"request {i}: frontend embeddings required")
+            b = min(r.max_new_tokens or max_new_tokens, max_new_tokens)
+            budgets.append(b)
+            res = F + self._bucket(len(r.tokens)) + b
+            if res > self.cache_len:
+                raise ValueError(
+                    f"request {i}: frontend {F} + prompt bucket "
+                    f"{self._bucket(len(r.tokens))} + budget {b} = {res} "
+                    f"exceeds cache_len {self.cache_len}")
+            if res > self.token_budget:
+                raise ValueError(
+                    f"request {i}: reservation {res} exceeds token_budget "
+                    f"{self.token_budget} — it could never be admitted")
+            resv.append(res)
+
+        pool = SlotPool(self.max_slots)
+        slots = self.model.init_slot_state(self.max_slots, self.cache_len)
+        arr_order = sorted(range(n), key=lambda i: (requests[i].arrival, i))
+        arrived: deque = deque()
+        p = 0                       # next not-yet-arrived index in arr_order
+        clock = 0.0
+        reserved = 0
+        ev = 0                      # key-fold event counter
+        slot_req: dict[int, int] = {}
+        slot_ngen = np.zeros(self.max_slots, np.int64)  # host n_gen mirror
+        outputs: list[list[int]] = [[] for _ in range(n)]
+        delays = np.zeros(n)
+        done_tick = np.zeros(n)
+        completed = 0
+
+        def retire(s: int, i: int):
+            nonlocal reserved, completed
+            pool.release(s)
+            del slot_req[s]
+            reserved -= resv[i]
+            done_tick[i] = clock
+            completed += 1
+            if on_complete is not None:
+                on_complete(i, np.asarray(outputs[i], np.int32))
+
+        def emit(i: int, t: int):
+            outputs[i].append(t)
+            self.stats["tokens_real"] += 1
+            if on_token is not None:
+                on_token(i, t)
+
+        while completed < n:
+            while p < n and requests[arr_order[p]].arrival <= clock + 1e-9:
+                arrived.append(arr_order[p])
+                p += 1
+            # strict-FIFO admission under the slot + token-budget caps
+            admits: list[int] = []
+            while (arrived and pool.n_free > len(admits)
+                   and reserved + sum(resv[j] for j in admits)
+                   + resv[arrived[0]] <= self.token_budget):
+                admits.append(arrived.popleft())
+            # group same-bucket admits into fixed-shape prefill launches
+            g = 0
+            while g < len(admits):
+                bucket = self._bucket(len(requests[admits[g]].tokens))
+                group = [admits[g]]
+                g += 1
+                while (g < len(admits) and len(group) < self.prefill_batch
+                       and self._bucket(len(requests[admits[g]].tokens))
+                       == bucket):
+                    group.append(admits[g])
+                    g += 1
+                Bp = self.prefill_batch
+                toks = np.full((Bp, bucket), self.pad_id, np.int32)
+                lens = np.full((Bp,), bucket, np.int32)
+                sidx = np.full((Bp,), self.max_slots, np.int32)  # dummy→drop
+                buds = np.ones((Bp,), np.int32)
+                for r, i in enumerate(group):
+                    t = np.asarray(requests[i].tokens, np.int32)
+                    toks[r, :len(t)] = t
+                    lens[r] = len(t)
+                    s = pool.alloc()
+                    slot_req[s] = i
+                    sidx[r] = s
+                    buds[r] = budgets[i]
+                    reserved += resv[i]
+                    delays[i] = clock - requests[i].arrival
+                self.stats["max_reserved"] = max(self.stats["max_reserved"],
+                                                 reserved)
+                batch = {"tokens": jnp.asarray(toks)}
+                if self._needs_frontend:
+                    fes = [jnp.asarray(requests[i].frontend) for i in group]
+                    fes += [jnp.zeros_like(fes[0])] * (Bp - len(group))
+                    batch["frontend"] = jnp.stack(fes)
+                # attention archs ALWAYS pass prompt_lens (one trace per
+                # bucket, ragged or not); recurrent archs bucket by exact
+                # length, so rows are never ragged and prompt_lens stays None
+                pl = None if self._exact_lens else jnp.asarray(lens)
+                tok0, slots = self._prefill_fn(bucket)(
+                    self.params, slots, batch, jnp.asarray(sidx),
+                    jnp.asarray(buds), jax.random.fold_in(key, ev),
+                    prompt_lens=pl)
+                ev += 1
+                clock += max(1, math.ceil(bucket / self.seg_len))
+                self.stats["prefill_launches"] += 1
+                self.stats["prefill_slot_rows"] += Bp
+                tok0 = np.asarray(tok0)
+                for r, i in enumerate(group):
+                    t0 = int(tok0[r])
+                    emit(i, t0)
+                    slot_ngen[sidx[r]] = 1
+                    # instantly-done rows (budget 1, or first token is EOS)
+                    # retire before ever occupying a decode segment
+                    if budgets[i] <= 1 or (self.eos_id is not None
+                                           and t0 == self.eos_id):
+                        retire(int(sidx[r]), i)
+            if slot_req:
+                emitted, slots = self._seg_fn()(
+                    self.params, slots, jax.random.fold_in(key, ev))
+                ev += 1
+                clock += self.seg_len
+                self.stats["segments"] += 1
+                self.stats["decode_slot_steps"] += self.max_slots * self.seg_len
+                em = np.asarray(emitted)
+                ngen = np.asarray(slots.n_gen)
+                done = np.asarray(slots.done)
+                for s, i in list(slot_req.items()):
+                    k = int(ngen[s] - slot_ngen[s])   # done is monotone in a
+                    for t in em[s, :k]:               # segment → real tokens
+                        emit(i, int(t))               # are a prefix
+                    slot_ngen[s] = ngen[s]
+                    if done[s]:
+                        retire(s, i)
+            elif not arrived:
+                if p >= n:          # nothing live, queued, or future: bug
+                    raise RuntimeError(
+                        "scheduler stalled with requests outstanding")
+                clock = max(clock, requests[arr_order[p]].arrival)  # idle jump
+            else:
+                # arrived-but-unadmitted with an EMPTY pool is impossible:
+                # reserved == 0 and every reservation was validated above
+                raise RuntimeError("admission stalled with free slots")
+
+        self.stats["slot_allocs"] = pool.allocs
+        token_slots = (self.stats["prefill_slot_rows"]
+                       + self.stats["decode_slot_steps"])
+        report = {
+            "requests": n,
+            "max_slots": self.max_slots,
+            "seg_len": self.seg_len,
+            "prefill_batch": self.prefill_batch,
+            "token_budget": self.token_budget,
+            "clock_ticks": float(clock),
+            "tokens_real": self.stats["tokens_real"],
+            "token_slots": token_slots,
+            "goodput": self.stats["tokens_real"] / max(token_slots, 1),
+            "delay_p50": float(np.percentile(delays, 50)),
+            "delay_p99": float(np.percentile(delays, 99)),
+            "completion_p99": float(np.percentile(
+                done_tick - np.array([r.arrival for r in requests]), 99)),
+            "prefill_launches": self.stats["prefill_launches"],
+            "segments": self.stats["segments"],
+            "slot_allocs": pool.allocs,
+            "slot_reuse": pool.reuses,
+            "max_reserved": self.stats["max_reserved"],
+            "prefill_traces": self.stats["prefill_traces"],
+            "decode_traces": self.stats["decode_traces"],
+        }
+        return [np.asarray(o, np.int32) for o in outputs], report
 
 
 def main(argv=None):
@@ -193,6 +583,22 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="treat this token id as EOS (early exit)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve an open Poisson stream through the "
+                         "slot-pool ContinuousEngine instead of the "
+                         "closed-batch GenerationEngine")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="continuous: slot-pool arena size")
+    ap.add_argument("--seg-len", type=int, default=8,
+                    help="continuous: decode steps per jitted segment")
+    ap.add_argument("--prefill-batch", type=int, default=2,
+                    help="continuous: fixed prefill launch batch")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="continuous: Poisson arrivals per virtual tick")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="continuous: admission cap on reserved tokens")
     ap.add_argument("--flash-min-len", type=int, default=None,
                     help="prefill dispatches causal self-attention to the "
                          "Pallas flash kernels when prompt_len >= this "
@@ -216,15 +622,50 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     lo = max(args.prompt_len // 2, 1)
     requests = []
+    arrival = 0.0
     for i in range(args.requests):
         n = int(rng.integers(lo, args.prompt_len + 1))
         if model._has_recurrent_state():
             n = args.prompt_len          # exact-length batching demo
         fe = None if fe_all is None else fe_all[i]
-        requests.append(Request(tokens=toks[i, :n], frontend=fe))
+        gen_i = None
+        if args.continuous:              # mixed per-request gen lengths —
+            gen_i = int(rng.integers(1, args.gen + 1))   # the churn driver
+            arrival += float(rng.exponential(1.0 / max(args.arrival_rate,
+                                                       1e-9)))
+        requests.append(Request(tokens=toks[i, :n], frontend=fe,
+                                max_new_tokens=gen_i, arrival=arrival))
+
+    if args.continuous:
+        cache_len = _bucket_len(args.prompt_len) + args.gen + \
+            (cfg.frontend_len if (cfg.is_encdec or cfg.family == "vlm")
+             else 0)
+        engine = ContinuousEngine(
+            model, params, cache_len=cache_len, max_slots=args.slots,
+            seg_len=args.seg_len, prefill_batch=args.prefill_batch,
+            token_budget=args.token_budget, temperature=args.temperature,
+            top_k=args.top_k, eos_id=args.eos_id, seed=args.seed)
+        t0 = time.time()
+        outs, report = engine.serve(requests, args.gen,
+                                    key=jax.random.PRNGKey(args.seed + 1))
+        t_serve = time.time() - t0
+        print(f"continuous: {args.requests} requests, {args.slots} slots, "
+              f"seg_len {args.seg_len}, token_budget {engine.token_budget}")
+        print(f"  wall (incl. {engine.compile_count} compiles): "
+              f"{t_serve*1e3:.1f} ms")
+        print(f"  goodput {report['goodput']:.3f} "
+              f"({report['tokens_real']} real / {report['token_slots']} "
+              f"token-slots), slot reuse {report['slot_reuse']}")
+        print(f"  queueing delay (virtual ticks): "
+              f"p50 {report['delay_p50']:.1f}  p99 {report['delay_p99']:.1f}")
+        print("sample generations (token ids):")
+        for o in outs[:2]:
+            print("  ", [int(t) for t in o[:16]])
+        return outs
 
     engine = GenerationEngine(model, params, max_batch=args.batch,
-                              temperature=args.temperature, top_k=args.top_k)
+                              temperature=args.temperature,
+                              top_k=args.top_k, eos_id=args.eos_id)
     t0 = time.time()
     outs = engine.generate(requests, args.gen,
                            key=jax.random.PRNGKey(args.seed + 1))
@@ -240,6 +681,9 @@ def main(argv=None):
           f"{t_warm*1e3:.1f} ms")
     print(f"  steady-state: {t_serve*1e3:.1f} ms "
           f"({n_tok / max(t_serve, 1e-9):.1f} tok/s)")
+    print(f"  tokens: {engine.stats['tokens_generated']} generated, "
+          f"{engine.stats['tokens_padded']} padded "
+          f"(goodput {engine.goodput:.3f})")
     print("sample generations (token ids):")
     for o in outs[:2]:
         print("  ", [int(t) for t in o[:16]])

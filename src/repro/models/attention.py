@@ -221,22 +221,35 @@ def flash_attention(p, x, cfg, *, causal=True, window=0, positions=None,
 
 
 # ------------------------------------------------------------- decoding ----
-def decode_attention(p, x, cfg, cache, pos, *, window=0):
+def decode_attention(p, x, cfg, cache, pos, *, window=0, active=None):
     """One-token decode: x (B,1,D); cache {"k","v"}: (B, S, Hk, dh).
 
     ``pos`` is the per-row cache write position — scalar or (B,) i32 (ragged
     prompts decode at different true positions; VLM rows are offset by the
     patch-prefix length). Writes the new K/V at ``pos[b]`` then attends over
     the first pos[b]+1 entries (masked). For local layers only the last
-    ``window`` positions score."""
+    ``window`` positions score.
+
+    ``active (B,) bool`` is the slot-masked decode path (continuous
+    batching, DESIGN.md §10): rows with ``active[b] == False`` are retired
+    slots whose KV write is DROPPED (the scatter lands out of bounds) so a
+    frozen row never mutates its arena slot — full-cache ``where`` selects
+    would cost O(S) per step; redirecting the one-row scatter is free."""
     B = x.shape[0]
     S = cache["k"].shape[1]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos[:, None]                         # (B, 1)
     q, k_new, v_new = _qkv(p, x, x, cfg, positions, positions)
     rows = jnp.arange(B)
-    k = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
-    v = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+    if active is None:
+        k = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        wpos = jnp.where(active, pos, S)             # inactive rows → OOB
+        k = cache["k"].at[rows, wpos].set(
+            k_new[:, 0].astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[rows, wpos].set(
+            v_new[:, 0].astype(cache["v"].dtype), mode="drop")
     scores = _gqa_scores(q, k, cfg)                  # (B,hk,g,1,S)
     kj = jnp.arange(S)[None, :]
     invalid = kj > positions                         # (B, S)

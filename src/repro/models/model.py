@@ -14,7 +14,16 @@ cache position (including the VLM patch-prefix length and per-row ragged
 prompt lengths) and ``decode_step`` advances it, so callers never compute
 positions and cannot reproduce the frontend-offset bug class. ``generate``
 is the jit-resident decode loop (lax.scan over tokens, in-jit sampling)
-that serving and benchmarks drive.
+that serving and benchmarks drive; it supports EOS / per-request token
+budgets (finished rows freeze ``pos`` and emit ``pad_id``).
+
+Continuous batching (DESIGN.md §10): ``SlotState`` generalizes the decode
+arena to a fixed ``(max_slots, cache_len)`` slot pool with per-slot
+liveness; ``prefill_into`` scatters freshly prefilled requests into free
+slots and ``decode_segment`` advances the whole pool a fixed number of
+steps — both are fixed-shape programs, so the host scheduler
+(launch.serve.ContinuousEngine) retires/refills rows between segments
+without ever recompiling.
 
 ``[audio]``/``[vlm]`` frontends are STUBS per the task spec: ``input_specs``
 provides precomputed frame/patch embeddings; the backbone is real.
@@ -66,6 +75,49 @@ class DecodeState:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(tuple(children[0]), children[1])
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class SlotState:
+    """Slot-pool serving carry (continuous batching, DESIGN.md §10).
+
+    The KV arena is a ``DecodeState`` over a fixed ``max_slots`` batch; the
+    per-slot vectors make row liveness part of the jitted carry so the host
+    scheduler (launch.serve.ContinuousEngine) only ever *reads* them:
+
+      tok    (B, 1) i32  — last sampled token, not yet consumed
+      active (B,)  bool  — slot holds an admitted request (free slots False)
+      done   (B,)  bool  — request finished (EOS / budget); stays True until
+                           the slot is refilled by ``prefill_into``
+      n_gen  (B,)  i32   — tokens emitted so far (including the prefill one)
+      budget (B,)  i32   — per-request max_new_tokens
+
+    A slot advances iff ``active & ~done``; retired rows freeze ``pos``,
+    drop their KV write, and emit ``pad_id`` — so one fixed-shape
+    ``decode_segment`` program serves an arbitrarily churning request mix."""
+
+    state: DecodeState
+    tok: jax.Array
+    active: jax.Array
+    done: jax.Array
+    n_gen: jax.Array
+    budget: jax.Array
+
+    _FIELDS = ("state", "tok", "active", "done", "n_gen", "budget")
+
+    def tree_flatten_with_keys(self):
+        return (tuple((jax.tree_util.GetAttrKey(f), getattr(self, f))
+                      for f in self._FIELDS), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def run(self):
+        """(B,) bool — slots that advance this step."""
+        return self.active & ~self.done
 
 
 def sample_logits(logits, key, temperature: float = 0.0, top_k: int = 0):
@@ -236,24 +288,34 @@ class Model:
         logits = self._head(params, x_last)
         return logits, DecodeState(tuple(layers), pos)
 
-    def decode_step(self, params, state: DecodeState, token):
+    def decode_step(self, params, state: DecodeState, token, active=None):
         """One-token serve step: token (B,1) i32; positions come from
-        ``state.pos``. Returns (logits (B,1,V) fp32, new DecodeState)."""
+        ``state.pos``. Returns (logits (B,1,V) fp32, new DecodeState).
+
+        ``active (B,) bool``: slot-masked decode (continuous batching) —
+        rows with False freeze ``pos``, keep their caches bit-identical
+        (KV writes dropped, recurrent states re-selected) and their logits
+        are garbage the caller must discard. None = all rows live, with
+        the exact pre-slot-pool lowering."""
         params = _as_tree(params)
         cfg = self.cfg
         x = embed_lookup(params["embed"], token)
         new_layers = []
         for g, gp, c in zip(cfg.decoder_program(),
                             params["decoder"]["groups"], state.layers):
-            x, nc = tf.group_decode(gp, x, g, cfg, c, state.pos)
+            x, nc = tf.group_decode(gp, x, g, cfg, c, state.pos,
+                                    active=active)
             new_layers.append(nc)
+        adv = 1 if active is None else active.astype(jnp.int32)
         return self._head(params, x), DecodeState(tuple(new_layers),
-                                                  state.pos + 1)
+                                                  state.pos + adv)
 
     def generate(self, params, batch, max_new_tokens: int, *,
                  key=None, temperature: float = 0.0, top_k: int = 0,
                  prompt_lens: Optional[jax.Array] = None,
-                 cache_len: Optional[int] = None):
+                 cache_len: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 gen_lens: Optional[jax.Array] = None, pad_id: int = 0):
         """Jit-resident generation: prefill + a ``lax.scan`` over decode
         steps with the DecodeState as donated carry and in-jit sampling.
         Returns (tokens (B, max_new_tokens) i32, final DecodeState).
@@ -261,7 +323,16 @@ class Model:
         Wrap in ``jax.jit`` with static ``max_new_tokens`` / ``temperature``
         / ``top_k`` / ``cache_len`` — the whole token loop then lowers to one
         XLA while-loop: no per-token dispatch, no per-step cache allocation
-        (the scan carry is double-buffered once, not per token)."""
+        (the scan carry is double-buffered once, not per token).
+
+        Early exit: ``eos_id`` and/or per-request budgets ``gen_lens (B,)
+        i32`` (clamped to ``max_new_tokens``) carry a ``done`` mask through
+        the scan — finished rows freeze ``pos``, stop writing KV, and emit
+        ``pad_id``, so no request pays another row's decode length in
+        anything but (masked) scan slots. The EOS token itself is emitted;
+        pre-done tokens are bit-identical to the un-masked scan (rows are
+        batch-independent). With both None the pre-existing un-masked
+        lowering is used unchanged."""
         params = _as_tree(params)
         B, T = batch["tokens"].shape
         F = self._prefix_len
@@ -276,16 +347,137 @@ class Model:
                                      prompt_lens=prompt_lens)
         tok = sample_logits(logits[:, -1], keys[0], temperature, top_k)[:, None]
 
+        if eos_id is None and gen_lens is None:       # closed-batch fast path
+            def body(carry, k):
+                state, tok = carry
+                logits, state = self.decode_step(params, state, tok)
+                nxt = sample_logits(logits[:, -1], k, temperature,
+                                    top_k)[:, None]
+                return (state, nxt), tok[:, 0]
+
+            if max_new_tokens == 1:
+                return tok, state
+            (state, last), toks = jax.lax.scan(body, (state, tok), keys[1:])
+            return jnp.concatenate([toks.T, last], axis=1), state
+
+        if gen_lens is None:
+            budget = jnp.full((B,), max_new_tokens, jnp.int32)
+        else:
+            budget = jnp.minimum(gen_lens.astype(jnp.int32), max_new_tokens)
+        done = budget <= 1
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+
         def body(carry, k):
-            state, tok = carry
-            logits, state = self.decode_step(params, state, tok)
-            nxt = sample_logits(logits[:, -1], k, temperature, top_k)[:, None]
-            return (state, nxt), tok[:, 0]
+            state, tok, done, n = carry
+            run = ~done
+            logits, state = self.decode_step(params, state, tok, active=run)
+            nxt = sample_logits(logits[:, -1], k, temperature, top_k)
+            n = n + run.astype(jnp.int32)
+            done = done | (run & (n >= budget))
+            if eos_id is not None:
+                done = done | (run & (nxt == eos_id))
+            emit = jnp.where(run, nxt, pad_id)
+            tok = jnp.where(run, nxt, tok[:, 0])[:, None]
+            return (state, tok, done, n), emit
 
         if max_new_tokens == 1:
             return tok, state
-        (state, last), toks = jax.lax.scan(body, (state, tok), keys[1:])
-        return jnp.concatenate([toks.T, last], axis=1), state
+        carry = (state, tok, done, jnp.ones((B,), jnp.int32))
+        (state, *_), emits = jax.lax.scan(body, carry, keys[1:])
+        return jnp.concatenate([tok, emits.T], axis=1), state
+
+    # -------------------------------------------- slot-pool serving (§10) --
+    def init_slot_state(self, max_slots: int, cache_len: int) -> SlotState:
+        """Empty slot-pool arena: every slot free (active=False)."""
+        B = max_slots
+        return SlotState(
+            state=self.init_decode_state(B, cache_len),
+            tok=jnp.zeros((B, 1), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            done=jnp.zeros((B,), bool),
+            n_gen=jnp.zeros((B,), jnp.int32),
+            budget=jnp.zeros((B,), jnp.int32))
+
+    def prefill_into(self, params, slots: SlotState, batch, slot_idx,
+                     budget, key, *, cache_len: int, prompt_lens=None,
+                     temperature: float = 0.0, top_k: int = 0,
+                     eos_id: Optional[int] = None):
+        """Prefill a (small, fixed-shape) batch of new requests and scatter
+        the resulting rows into the slot pool at ``slot_idx (Bp,) i32``.
+
+        Rows with ``slot_idx >= max_slots`` are padding (the host pads
+        admission groups to a fixed prefill batch so compiles stay one per
+        prompt bucket); their scatters land out of bounds and are DROPPED,
+        so dummy rows never touch the arena. Samples each new request's
+        first token from the prefill logits (one fold per row would change
+        the stream — the whole group shares ``key`` exactly like a closed
+        batch). ``cache_len`` must be the POOL's cache length: the prefill
+        rows are scattered into the arena whole, so their shapes must match
+        slot rows exactly. Returns (tok0 (Bp,) i32, new SlotState)."""
+        params = _as_tree(params)
+        slot_idx = jnp.asarray(slot_idx, jnp.int32)
+        budget = jnp.asarray(budget, jnp.int32)
+        logits, new_state = self.prefill(params, batch, cache_len,
+                                         prompt_lens=prompt_lens)
+        tok0 = sample_logits(logits[:, -1], key, temperature, top_k)
+        done0 = budget <= 1
+        if eos_id is not None:
+            done0 = done0 | (tok0 == eos_id)
+        Bp = tok0.shape[0]
+
+        def scat_row(pool_leaf, new_leaf):       # batch dim 1 (layer-stacked)
+            return pool_leaf.at[:, slot_idx].set(
+                new_leaf.astype(pool_leaf.dtype), mode="drop")
+
+        layers = jax.tree_util.tree_map(scat_row, slots.state.layers,
+                                        new_state.layers)
+        ones = jnp.ones((Bp,), bool)
+        return tok0, SlotState(
+            state=DecodeState(
+                layers,
+                slots.state.pos.at[slot_idx].set(new_state.pos, mode="drop")),
+            tok=slots.tok.at[slot_idx].set(tok0[:, None], mode="drop"),
+            active=slots.active.at[slot_idx].set(ones, mode="drop"),
+            done=slots.done.at[slot_idx].set(done0, mode="drop"),
+            n_gen=slots.n_gen.at[slot_idx].set(
+                jnp.ones((Bp,), jnp.int32), mode="drop"),
+            budget=slots.budget.at[slot_idx].set(budget, mode="drop"))
+
+    def decode_segment(self, params, slots: SlotState, key, *, seg_len: int,
+                       temperature: float = 0.0, top_k: int = 0,
+                       eos_id: Optional[int] = None, pad_id: int = 0):
+        """Advance the whole slot pool ``seg_len`` decode steps in ONE
+        fixed-shape jitted program (a lax.scan, slot arrays in the carry).
+
+        Per step, only ``run = active & ~done`` slots consume their token,
+        write KV, and advance ``pos``; rows that hit EOS or their budget
+        flip ``done`` mid-segment and coast (emitting ``pad_id``) until the
+        host retires them between segments. Returns
+        (emitted (max_slots, seg_len) i32, new SlotState); for slot b the
+        real tokens of the segment are the first
+        ``n_gen_after[b] − n_gen_before[b]`` entries of ``emitted[b]``
+        (``done`` is monotone within a segment, so real tokens are always a
+        prefix)."""
+        params = _as_tree(params)
+        keys = jax.random.split(key, seg_len)
+
+        def body(st, k):
+            run = st.run
+            logits, dstate = self.decode_step(params, st.state, st.tok,
+                                              active=run)
+            nxt = sample_logits(logits[:, -1], k, temperature, top_k)
+            n_gen = st.n_gen + run.astype(jnp.int32)
+            done = st.done | (run & (n_gen >= st.budget))
+            if eos_id is not None:
+                done = done | (run & (nxt == eos_id))
+            emit = jnp.where(run, nxt, pad_id)
+            tok = jnp.where(run, nxt, st.tok[:, 0])[:, None]
+            return SlotState(dstate, tok, st.active, done, n_gen,
+                             st.budget), emit
+
+        slots, emitted = jax.lax.scan(body, slots, keys)
+        return emitted.T, slots
 
     # --------------------------------------------------------- dry-run IO --
     def input_specs(self, shape: ShapeConfig) -> dict:

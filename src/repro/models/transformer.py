@@ -144,11 +144,31 @@ def group_apply(params, x, group: Group, cfg: ModelConfig, memory=None,
 
 
 # ----------------------------------------------------------------- decode --
-def sub_decode(p, x, sub: Sub, cfg: ModelConfig, cache, pos, memory=None):
-    """One-token step. Returns (x_out, new_cache_or_None)."""
+def _freeze_rows(new, old, active):
+    """Per-row select between the advanced and the previous cache: retired
+    slots (continuous batching) must not mutate their carried state. Only
+    used for the SMALL recurrent states (mamba h/conv, rwkv S/last_x —
+    O(B·d) leaves); the attention KV write is masked at the scatter site
+    instead (attn.decode_attention), where a full-cache select would be
+    O(B·S·d) per token."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(
+            active.reshape(active.shape + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
+def sub_decode(p, x, sub: Sub, cfg: ModelConfig, cache, pos, memory=None,
+               active=None):
+    """One-token step. Returns (x_out, new_cache_or_None).
+
+    ``active (B,) bool``: slot-masked decode — rows with False keep their
+    cache/state bit-identical (their computed output is discarded by the
+    caller); None = every row live (the closed-batch fast path, unchanged
+    lowering)."""
     h = rms_norm(x, p["norm"], cfg.norm_eps)
     if sub.kind == "attn":
-        out, nc = attn.decode_attention(p, h, cfg, cache, pos, window=sub.window)
+        out, nc = attn.decode_attention(p, h, cfg, cache, pos,
+                                        window=sub.window, active=active)
     elif sub.kind == "cross_attn":
         out = attn.cross_decode(p, h, cfg, cache)
         nc = cache
@@ -159,17 +179,23 @@ def sub_decode(p, x, sub: Sub, cfg: ModelConfig, cache, pos, memory=None):
         nc = None
     elif sub.kind == "mamba":
         out, nc = ssm_lib.mamba_decode(p, h, cfg, cache)
+        if active is not None:
+            nc = _freeze_rows(nc, cache, active)
     elif sub.kind == "rwkv_tmix":
         out, nc = rwkv_lib.rwkv_tmix_decode(p, h, cfg, cache)
+        if active is not None:
+            nc = _freeze_rows(nc, cache, active)
     elif sub.kind == "rwkv_cmix":
         out, nc = rwkv_lib.rwkv_cmix_decode(p, h, cfg, cache)
+        if active is not None:
+            nc = _freeze_rows(nc, cache, active)
     else:
         raise ValueError(sub.kind)
     return x + out, nc
 
 
 def group_decode(params, x, group: Group, cfg: ModelConfig, caches, pos,
-                 memory=None):
+                 memory=None, active=None):
     """Scan over layers carrying x; xs = (params, caches); ys = new caches."""
 
     def body(h, inp):
@@ -178,7 +204,8 @@ def group_decode(params, x, group: Group, cfg: ModelConfig, caches, pos,
         for i, s in enumerate(group.period):
             key = f"sub{i}"
             h, nc = sub_decode(layer_params[key], h, s, cfg,
-                               layer_cache.get(key), pos, memory=memory)
+                               layer_cache.get(key), pos, memory=memory,
+                               active=active)
             if key in layer_cache:
                 new_cache[key] = nc if nc is not None else layer_cache[key]
         return h, new_cache

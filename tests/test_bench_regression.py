@@ -5,7 +5,8 @@ doctored artifacts — a gate that can't fail is decoration, not CI.
 Each doctoring below reintroduces a specific regression a prior PR's bench
 claim forbids: an O(L²) score buffer, a per-leaf collective storm, an f32
 wire dtype on a compressed path, steady-state concats in the bucketed
-optimizer step, a growing decode temp arena."""
+optimizer step, a growing decode temp arena, a continuous-batching engine
+that recompiles under churn or stops beating the closed batch."""
 import copy
 import json
 import os
@@ -186,6 +187,71 @@ class TestDoctoredArtifactsFail:
         cur["ok"]["source_lint_clean"] = False
         assert any("lint" in x
                    for x in cr.check_precision_audit(cur, base))
+
+    def test_serving_goodput_below_closed_fails(self):
+        """Continuous batching that no longer beats the closed engine on
+        its own trace is the tentpole claim broken."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["goodput"] = cur["closed"]["goodput"] * 0.9
+        cur["ok"]["goodput_beats_closed"] = False
+        v = cr.check_serving(cur, base)
+        assert any("does not beat" in x for x in v), v
+
+    def test_serving_extra_decode_trace_fails(self):
+        """A second decode-segment executable means churn is recompiling —
+        the fixed-shape slot-pool contract is gone."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["decode_traces"] = 3
+        cur["ok"]["single_decode_trace"] = False
+        assert any("recompiling" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_unbounded_prefill_traces_fail(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["prefill_traces"] = cur["n_prompt_buckets"] + 5
+        cur["ok"]["prefill_traces_bounded"] = False
+        assert any("prefill executables" in x
+                   for x in cr.check_serving(cur, base))
+
+    def test_serving_no_slot_reuse_fails(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["slot_reuse"] = 0
+        cur["ok"]["slot_reuse_under_churn"] = False
+        assert any("reused" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_token_stream_divergence_fails(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["tokens_real"] += 3
+        cur["continuous"]["goodput"] = \
+            cur["continuous"]["tokens_real"] / cur["continuous"]["token_slots"]
+        assert any("diverged" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_segment_arena_growth_fails(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["seg_temp_bytes_long"] = int(cur["seg_temp_bytes_short"] * 4)
+        cur["ok"]["seg_temp_flat"] = False
+        assert any("realloc" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_arena_copy_fails(self):
+        """Segment program no longer aliasing the donated slot arena means
+        the pool is copied every segment."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["seg_alias_bytes"] = cur["slot_arena_bytes"] // 2
+        cur["ok"]["seg_aliases_arena"] = False
+        assert any("copied" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_queueing_regression_fails(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["continuous"]["delay_p99"] *= 3
+        assert any("queueing regressed" in x
+                   for x in cr.check_serving(cur, base))
 
     def test_missing_baseline_fails_cli(self, tmp_path):
         art = tmp_path / "BENCH_train_step.json"

@@ -1,0 +1,290 @@
+"""Continuous-batching slot pool: host-side alloc/free invariants under
+randomized churn, continuous ≡ closed-batch bit-parity on the same trace
+and key, EOS / per-request-budget early-exit parity against the un-masked
+scan, admission control under a token budget, and slot-pool sharding specs.
+
+``hypothesis`` is optional (same fallback idiom as tests/test_mcf.py):
+when absent, the churn property test replays deterministic seeded examples
+instead of an adaptive search.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import (ContinuousEngine, GenerationEngine, Request,
+                                SlotPool)
+from repro.models.model import build_model
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                     # seeded fallback
+    class st:  # noqa: N801 — mimic hypothesis.strategies
+        @staticmethod
+        def integers(min_value, max_value):
+            return (int(min_value), int(max_value))
+
+    def settings(max_examples=25, deadline=None):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**specs):
+        def deco(fn):
+            def wrapper():
+                n = getattr(fn, "_max_examples", 25)
+                for i in range(n):
+                    rng = np.random.default_rng(i)
+                    kw = {k: int(rng.integers(lo, hi + 1))
+                          for k, (lo, hi) in specs.items()}
+                    fn(**kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+
+# ------------------------------------------------------ pool invariants --
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_slots=st.integers(1, 9))
+def test_pool_churn_invariants(seed, n_slots):
+    """Under random alloc/release interleaving: live ∩ free = ∅,
+    live ∪ free = all slots (none lost), no slot handed out twice while
+    live, and the reuse counter only counts genuine recycling."""
+    rng = np.random.default_rng(seed)
+    pool = SlotPool(n_slots)
+    mirror_live: set = set()
+    ever_used: set = set()
+    n_allocs = reuses = 0
+    for _ in range(60):
+        if pool.n_free and (not mirror_live or rng.random() < 0.55):
+            s = pool.alloc()
+            assert s not in mirror_live, "double-alloc of a live slot"
+            assert 0 <= s < n_slots
+            if s in ever_used:
+                reuses += 1
+            ever_used.add(s)
+            mirror_live.add(s)
+            n_allocs += 1
+        else:
+            s = int(rng.choice(sorted(mirror_live)))
+            pool.release(s)
+            mirror_live.remove(s)
+        assert pool.live == frozenset(mirror_live)
+        assert pool.n_free == n_slots - len(mirror_live), "slot lost"
+    assert pool.allocs == n_allocs
+    assert pool.reuses == reuses
+
+
+def test_pool_errors():
+    with pytest.raises(ValueError):
+        SlotPool(0)
+    pool = SlotPool(2)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1}
+    with pytest.raises(RuntimeError):
+        pool.alloc()                       # full pool
+    pool.release(a)
+    with pytest.raises(RuntimeError):
+        pool.release(a)                    # double free
+    with pytest.raises(RuntimeError):
+        pool.release(b + 5)                # never-allocated slot
+    assert pool.alloc() == a               # freed slot comes back
+
+
+# ----------------------------------------------------------- model layer --
+@pytest.fixture(scope="module")
+def gpt():
+    cfg = get_config("gpt-tiny", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(cfg, n, seed=3, lo=4, hi=12, gen_hi=10, fixed_len=None):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        L = fixed_len or int(rng.integers(lo, hi + 1))
+        reqs.append(Request(
+            tokens=rng.integers(2, cfg.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, gen_hi + 1)),
+            arrival=float(rng.uniform(0, 12))))
+    return reqs
+
+
+def test_eos_parity_with_unmasked_scan(gpt):
+    """Masked generate must emit exactly the un-masked scan's tokens up to
+    and including the first EOS, then pad_id, with pos frozen."""
+    cfg, model, params = gpt
+    G = 12
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(2, cfg.vocab_size, size=(3, 8)),
+        jnp.int32)}
+    free, state_f = model.generate(params, batch, G)
+    free = np.asarray(free)
+    # pick an EOS id that actually occurs mid-row in the free-run output,
+    # so the early exit demonstrably fires
+    eos = int(free[0][min(4, G - 2)])
+    done, state_d = model.generate(params, batch, G, eos_id=eos, pad_id=0)
+    done = np.asarray(done)
+    pos_f, pos_d = np.asarray(state_f.pos), np.asarray(state_d.pos)
+    for r in range(free.shape[0]):
+        hits = np.flatnonzero(free[r] == eos)
+        cut = int(hits[0]) + 1 if hits.size else G
+        assert (done[r, :cut] == free[r, :cut]).all(), (
+            f"row {r}: pre-EOS tokens diverged from the un-masked scan")
+        assert (done[r, cut:] == 0).all(), f"row {r}: non-pad after EOS"
+        # pos froze when the row finished: it advanced once per consumed
+        # token (prefill token included), not once per scan step
+        assert pos_d[r] == pos_f[r] - (G - cut)
+
+
+def test_per_request_budgets_in_closed_generate(gpt):
+    cfg, model, params = gpt
+    G = 10
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(1).integers(2, cfg.vocab_size, size=(4, 6)),
+        jnp.int32)}
+    free, _ = model.generate(params, batch, G)
+    free = np.asarray(free)
+    buds = jnp.asarray([1, 4, 10, 7], jnp.int32)
+    capped, _ = model.generate(params, batch, G, gen_lens=buds, pad_id=0)
+    capped = np.asarray(capped)
+    for r, b in enumerate([1, 4, 10, 7]):
+        assert (capped[r, :b] == free[r, :b]).all()
+        assert (capped[r, b:] == 0).all()
+
+
+# ------------------------------------------------- continuous vs closed --
+def _parity(closed, cont_outs, outs_closed, reqs, G):
+    for i, r in enumerate(reqs):
+        b = min(r.max_new_tokens or G, G)
+        want = np.asarray(
+            outs_closed[i][:closed._real_len(outs_closed[i], b)])
+        got = cont_outs[i]
+        assert len(want) == len(got) and (want == got).all(), (
+            f"request {i}: continuous {got} != closed {want}")
+
+
+def test_continuous_equals_closed_batch(gpt):
+    """Same trace, same key, greedy: the continuous engine must stream
+    bit-identical tokens to the closed-batch engine, while reusing slots
+    and compiling exactly one decode-segment program."""
+    cfg, model, params = gpt
+    G = 10
+    reqs = _trace(cfg, 9)
+    closed = GenerationEngine(model, params, max_batch=3)
+    outs_c = closed.generate(reqs, G, key=jax.random.PRNGKey(5))
+    cont = ContinuousEngine(model, params, cache_len=16 + G, max_slots=3,
+                            seg_len=4, prefill_batch=2)
+    outs_o, report = cont.serve(reqs, G, key=jax.random.PRNGKey(5))
+    _parity(closed, outs_o, outs_c, reqs, G)
+    assert report["decode_traces"] == 1
+    assert report["slot_reuse"] > 0, "9 requests through 3 slots must reuse"
+    assert report["slot_allocs"] == 9
+
+
+def test_continuous_with_eos(gpt):
+    """EOS retirement mid-stream: continuous rows cut at the same EOS
+    position as the closed engine's rows."""
+    cfg, model, params = gpt
+    G = 12
+    reqs = _trace(cfg, 6, seed=7, gen_hi=G)
+    probe = GenerationEngine(model, params, max_batch=2)
+    rows = probe.generate(reqs, G, key=jax.random.PRNGKey(9))
+    # an EOS id greedy decoding really emits mid-row (and that isn't pad)
+    eos = next(int(t) for row in rows for t in row[1:] if int(t) != 0)
+    closed = GenerationEngine(model, params, max_batch=2, eos_id=eos)
+    outs_c = closed.generate(reqs, G, key=jax.random.PRNGKey(9))
+    cont = ContinuousEngine(model, params, cache_len=16 + G, max_slots=2,
+                            seg_len=4, prefill_batch=2, eos_id=eos)
+    outs_o, report = cont.serve(reqs, G, key=jax.random.PRNGKey(9))
+    _parity(closed, outs_o, outs_c, reqs, G)
+    assert any(eos in o for o in map(list, outs_o)), "EOS never fired"
+    assert report["tokens_real"] == closed.stats["tokens_generated"]
+
+
+def test_continuous_recurrent_arch():
+    """Recurrent-state archs (no ragged prefill) serve continuously via
+    exact-length buckets — parity still bit-exact."""
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    model = build_model(cfg)
+    assert model._has_recurrent_state()
+    params = model.init(jax.random.PRNGKey(0))
+    G = 6
+    reqs = (_trace(cfg, 3, seed=2, fixed_len=6, gen_hi=G)
+            + _trace(cfg, 2, seed=4, fixed_len=9, gen_hi=G))
+    closed = GenerationEngine(model, params, max_batch=2)
+    outs_c = closed.generate(reqs, G, key=jax.random.PRNGKey(1))
+    cont = ContinuousEngine(model, params, cache_len=16 + G, max_slots=2,
+                            seg_len=3, prefill_batch=2)
+    outs_o, report = cont.serve(reqs, G, key=jax.random.PRNGKey(1))
+    _parity(closed, outs_o, outs_c, reqs, G)
+    assert report["prefill_traces"] <= 2   # one per exact prompt length
+
+
+def test_admission_token_budget(gpt):
+    """Reserved tokens (frontend + bucket + budget per live row) must never
+    exceed the admission budget, and a budget no request fits is rejected
+    up front rather than deadlocking the scheduler."""
+    cfg, model, params = gpt
+    G = 8
+    reqs = _trace(cfg, 6, seed=11, gen_hi=G)
+    tight = 2 * (16 + G)            # room for ~2 live rows
+    cont = ContinuousEngine(model, params, cache_len=16 + G, max_slots=4,
+                            seg_len=4, prefill_batch=2, token_budget=tight)
+    outs, report = cont.serve(reqs, G, key=jax.random.PRNGKey(0))
+    assert report["max_reserved"] <= tight
+    assert all(len(o) == min(r.max_new_tokens, G)
+               for o, r in zip(outs, reqs))
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, params, cache_len=16 + G, max_slots=4,
+                         token_budget=8).serve(reqs, G)
+
+
+def test_engine_config_validation(gpt):
+    cfg, model, params = gpt
+    with pytest.raises(ValueError):
+        GenerationEngine(model, params, eos_id=0, pad_id=0)
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, params, cache_len=32, eos_id=0, pad_id=0)
+    with pytest.raises(ValueError):   # request that can never fit the cache
+        ContinuousEngine(model, params, cache_len=8).serve(
+            [Request(tokens=np.arange(1, 7, dtype=np.int32))], 8)
+
+
+def test_closed_engine_goodput_stats(gpt):
+    """tokens_generated + tokens_padded must account for every scan slot
+    the engine paid for (batches × padded batch × gen length)."""
+    cfg, model, params = gpt
+    G = 8
+    reqs = _trace(cfg, 5, seed=13, gen_hi=G)
+    eng = GenerationEngine(model, params, max_batch=2)
+    eng.generate(reqs, G, key=jax.random.PRNGKey(2))
+    s = eng.stats
+    assert s["tokens_generated"] + s["tokens_padded"] == \
+        s["batches"] * 2 * G
+    assert s["tokens_generated"] == sum(
+        min(r.max_new_tokens, G) for r in reqs)
+    assert 0 < eng.goodput <= 1
+
+
+def test_slot_state_shardings(gpt):
+    """cache_shardings must route SlotState bookkeeping leaves to the same
+    batch-dim layout as DecodeState.pos (slots co-shard with rows)."""
+    from repro.distributed import sharding as shard_lib
+    cfg, model, params = gpt
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    slots_abs = jax.eval_shape(lambda: model.init_slot_state(4, 32))
+    sh = shard_lib.cache_shardings(slots_abs, mesh)
+    pos_spec = sh.state.pos.spec
+    assert sh.active.spec == pos_spec
+    assert sh.done.spec == pos_spec
+    assert sh.n_gen.spec == pos_spec
+    assert sh.budget.spec == pos_spec
+    assert sh.tok.spec != ()           # not the scalar fallback
+    if len(pos_spec):
+        assert sh.tok.spec[0] == pos_spec[0]
