@@ -29,7 +29,11 @@ contract:
                       executable + ≤ one prefill executable per prompt
                       bucket, slot reuse under churn, seg-len-flat and
                       arena-aliasing segment temp memory, queueing-delay
-                      percentiles (virtual clock, machine-independent);
+                      percentiles (virtual clock, machine-independent),
+                      and the speculative contract when baselined: greedy
+                      bit-parity, acceptance > 0 with strictly fewer
+                      target forwards than committed tokens, one draft +
+                      one verify executable;
   BENCH_precision_audit  the no-master-copy invariant per (config ×
                       strategy × mode) cell (zero parameter-shaped f32
                       live across steps for 16-bit strategies, the D
@@ -260,6 +264,47 @@ def check_serving(cur: dict, base: dict) -> list:
               <= b_cont.get(pct, 0) * SIZE_TOL,
               f"serving: virtual-clock {pct} {c_cont.get(pct)} > baseline "
               f"{b_cont.get(pct)}×{SIZE_TOL} — queueing regressed")
+    # speculative-decoding contract (PR 10): recomputed from the artifact's
+    # own numbers, never trusted from flags. Bit-parity is the load-bearing
+    # claim — greedy speculative ≡ greedy non-speculative on the same
+    # seeded trace — and the launch economics must be real: strictly fewer
+    # target per-slot forwards than tokens committed (acceptance > 0),
+    # with exactly one draft-propose and one verify executable.
+    if "speculative" in base:
+        c_spec = cur.get("speculative")
+        if c_spec is None:
+            out.append("serving: baseline has a 'speculative' section but "
+                       "the current artifact does not — the speculative "
+                       "contract is no longer being exercised")
+        else:
+            b_spec = base["speculative"]
+            _viol(out, c_spec.get("parity_with_continuous") is True,
+                  "serving: speculative greedy stream is NOT bit-identical "
+                  "to the non-speculative greedy stream")
+            _viol(out, c_spec.get("tokens_real", -1)
+                  == c_cont.get("tokens_real", -2),
+                  f"serving: speculative real tokens "
+                  f"{c_spec.get('tokens_real')} != continuous "
+                  f"{c_cont.get('tokens_real')} on the same trace")
+            fw = c_spec.get("target_slot_forwards", 1 << 30)
+            committed = c_spec.get("spec_tokens_committed", 0)
+            _viol(out, fw < committed,
+                  f"serving: {fw} target per-slot forwards >= {committed} "
+                  f"committed tokens — speculation is not saving launches")
+            _viol(out, c_spec.get("acceptance_rate", 0) > 0,
+                  f"serving: speculative acceptance rate "
+                  f"{c_spec.get('acceptance_rate')} is not positive")
+            _viol(out, c_spec.get("acceptance_rate", 0)
+                  >= b_spec.get("acceptance_rate", 0) / (2 * SIZE_TOL),
+                  f"serving: acceptance rate "
+                  f"{c_spec.get('acceptance_rate')} collapsed below half "
+                  f"of baseline {b_spec.get('acceptance_rate')}")
+            _viol(out, c_spec.get("draft_traces", 99) == 1,
+                  f"serving: {c_spec.get('draft_traces')} draft-propose "
+                  f"executables (must be exactly 1)")
+            _viol(out, c_spec.get("verify_traces", 99) == 1,
+                  f"serving: {c_spec.get('verify_traces')} verify "
+                  f"executables (must be exactly 1)")
     _check_ok_flags(cur, base, out, "serving")
     return out
 

@@ -30,6 +30,13 @@ churn, a flat (seg-len-independent, arena-aliasing) segment temp arena,
 and virtual-clock queueing-delay percentiles (wall-clock informational).
 
   PYTHONPATH=src python -m benchmarks.decode --serving [--quick]
+
+``--serving --speculative`` additionally serves the trace through the
+speculative engine (a depth-truncated draft sharing the target's
+embed/head proposes ``--spec-k`` tokens per slot, one batched target
+forward verifies) and records the speculative contract: bit-parity with
+non-speculative greedy, acceptance > 0, target per-slot forwards strictly
+fewer than tokens committed, one draft + one verify executable.
 """
 from __future__ import annotations
 
@@ -44,9 +51,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticCorpus
-from repro.launch.serve import (ContinuousEngine, GenerationEngine, Request,
-                                _bucket_len)
-from repro.models.model import build_model
+from repro.launch.serve import (Request, SamplingParams, _bucket_len,
+                                draft_from_target, make_engine)
+from repro.models.model import build_model, greedy_tokens
 
 
 def _cache_bytes(state) -> int:
@@ -63,11 +70,11 @@ def make_python_loop(model, params, batch, gen: int, cache_len: int,
 
     def run():
         logits, state = prefill(params, batch)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        tok = greedy_tokens(logits[:, -1])[:, None]
         out = [tok]
         for _ in range(gen - 1):
             logits, state = step(params, state, tok)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            tok = greedy_tokens(logits[:, -1])[:, None]
             out.append(tok)
         jax.block_until_ready(tok)
         return jnp.concatenate(out, axis=1)
@@ -104,9 +111,13 @@ def serving_main(args):
     results = {"arch": cfg.name, "requests": N, "gen_lo": gen_lo,
                "gen_hi": gen_hi, "prompt_hi": prompt_hi, "seed": args.seed}
 
+    # one sampling config, both engines, via the unified factory — no
+    # engine-class branching at the call site
+    sampling = SamplingParams(eos_id=eos_id, pad_id=pad_id, seed=args.seed)
+
     # --- closed-batch baseline on the SAME trace --------------------------
-    closed = GenerationEngine(model, params, max_batch=slots,
-                              eos_id=eos_id, pad_id=pad_id)
+    closed = make_engine(model, params, mode="closed", sampling=sampling,
+                         max_batch=slots)
     t0 = time.time()
     outs_closed = closed.generate(requests, gen_hi,
                                   key=jax.random.PRNGKey(args.seed + 1))
@@ -120,10 +131,9 @@ def serving_main(args):
 
     # --- continuous engine ------------------------------------------------
     cache_len = _bucket_len(prompt_hi) + gen_hi + model._prefix_len
-    cont = ContinuousEngine(model, params, cache_len=cache_len,
-                            max_slots=slots, seg_len=seg_len,
-                            prefill_batch=prefill_batch, eos_id=eos_id,
-                            pad_id=pad_id, seed=args.seed)
+    cont = make_engine(model, params, mode="continuous", sampling=sampling,
+                       cache_len=cache_len, max_slots=slots,
+                       seg_len=seg_len, prefill_batch=prefill_batch)
     t0 = time.time()
     outs_cont, report = cont.serve(requests, gen_hi,
                                    key=jax.random.PRNGKey(args.seed + 1))
@@ -166,6 +176,38 @@ def serving_main(args):
     results["seg_alias_bytes"] = alias
     results["slot_arena_bytes"] = arena_bytes
 
+    # --- speculative decoding on the same trace (--speculative) -----------
+    if args.speculative:
+        # depth-truncated draft sharing the target's embed/head — no
+        # retraining, correlated greedy predictions → nonzero acceptance
+        draft_spec = f"layers:{max(cfg.n_layers // 2, 1)}"
+        dm, dp = draft_from_target(model, params, draft_spec)
+        spec_eng = make_engine(
+            model, params, mode="speculative", sampling=sampling,
+            cache_len=cache_len, max_slots=slots, seg_len=seg_len,
+            prefill_batch=prefill_batch, draft_model=dm, draft_params=dp,
+            spec_k=args.spec_k)
+        t0 = time.time()
+        outs_spec, spec_report = spec_eng.serve(
+            requests, gen_hi, key=jax.random.PRNGKey(args.seed + 1))
+        spec_report["wall_s"] = time.time() - t0   # informational only
+        spec_report["draft"] = draft_spec
+        # greedy speculative must be BIT-identical to non-speculative
+        # greedy continuous serving of the same trace
+        spec_parity = all(
+            len(a) == len(b) and (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(outs_cont, outs_spec))
+        spec_report["parity_with_continuous"] = spec_parity
+        results["speculative"] = spec_report
+        spec_ok = {
+            "spec_parity": spec_parity,
+            "spec_acceptance_positive": spec_report["acceptance_rate"] > 0,
+            "spec_forwards_lt_tokens": spec_report["target_slot_forwards"]
+            < spec_report["spec_tokens_committed"],
+            "spec_single_draft_trace": spec_report["draft_traces"] == 1,
+            "spec_single_verify_trace": spec_report["verify_traces"] == 1,
+        }
+
     n_buckets = len({cont._bucket(len(r.tokens)) for r in requests})
     results["n_prompt_buckets"] = n_buckets
     results["ok"] = {
@@ -181,6 +223,8 @@ def serving_main(args):
         "tokens_match_closed": report["tokens_real"]
         == results["closed"]["tokens_generated"],
     }
+    if args.speculative:
+        results["ok"].update(spec_ok)
     bad = sorted(k for k, v in results["ok"].items() if not v)
     assert not bad, f"serving structural contract failed: {bad}"
 
@@ -198,6 +242,14 @@ def serving_main(args):
           f"{report['prefill_traces']}+{report['decode_traces']} traces, "
           f"slot reuse {report['slot_reuse']}, "
           f"{report['wall_s']*1e3:.0f} ms")
+    if args.speculative:
+        sr = results["speculative"]
+        print(f"speculative   : draft {sr['draft']}, k={sr['spec_k']}, "
+              f"acceptance {sr['acceptance_rate']:.3f}, "
+              f"{sr['target_slot_forwards']} target forwards / "
+              f"{sr['spec_tokens_committed']} committed tokens, "
+              f"parity={sr['parity_with_continuous']}, "
+              f"{sr['wall_s']*1e3:.0f} ms")
     print(f"queueing delay: p50 {report['delay_p50']:.1f}  "
           f"p99 {report['delay_p99']:.1f} virtual ticks")
     print(f"segment arena : {t_short} B @ seg={seg_len} → {t_long} B @ "
@@ -218,6 +270,12 @@ def main(argv=None):
     ap.add_argument("--serving", action="store_true",
                     help="run the open-stream traffic simulator instead "
                          "(emits BENCH_serving.json)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="with --serving: also run the trace through the "
+                         "speculative engine (depth-truncated draft) and "
+                         "record the bit-parity/acceptance contract")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative: draft proposals per verify round")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     if args.out is None:

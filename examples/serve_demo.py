@@ -1,7 +1,10 @@
 """Serving demo: the jit-resident generation engine on three contrasting
 smoke models — granite (GQA KV cache, ragged power-of-two prompt buckets),
 RWKV6 (O(1) recurrent state, exact-length batching), and internvl2 (VLM:
-the patch prefix shifts every cache position — handled inside the model).
+the patch prefix shifts every cache position — handled inside the model) —
+then speculative decoding on the continuous slot-pool engine (a
+depth-truncated draft proposes, one batched target forward verifies;
+greedy output is bit-identical to plain greedy decode, DESIGN.md §11).
 
   PYTHONPATH=src python examples/serve_demo.py
 """
@@ -16,3 +19,9 @@ if __name__ == "__main__":
         serve_main(["--arch", arch, "--smoke", "--requests", "6",
                     "--batch", "4", "--prompt-len", "32", "--gen", "16",
                     *extra])
+
+    print("=== gpt-tiny continuous + speculative (layers:1 draft) ===")
+    serve_main(["--arch", "gpt-tiny", "--smoke", "--requests", "6",
+                "--prompt-len", "32", "--gen", "16", "--continuous",
+                "--slots", "4", "--speculative-draft", "layers:1",
+                "--spec-k", "4"])

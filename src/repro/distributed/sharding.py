@@ -202,9 +202,15 @@ def batch_shardings(abstract_batch: Any, mesh: Mesh) -> Any:
 
 def cache_shardings(abstract_caches: Any, mesh: Mesh,
                     context_parallel: bool = False) -> Any:
-    """DecodeState / KV-cache shardings: batch over dp, heads/channels over
-    model; the per-row position vector co-shards with the batch rows. When
-    ``context_parallel`` (long_500k, batch=1): cache LENGTH over "data"."""
+    """DecodeState / SlotState / SpecState KV-cache shardings: batch over
+    dp, heads/channels over model; the per-row position vector co-shards
+    with the batch rows. Routing is by leaf ATTRIBUTE NAME (keyed pytree
+    paths), so the speculative ``SpecState`` needs no extra rules: its
+    ``slots`` half reuses the SlotState rules and its ``draft`` half is a
+    plain DecodeState over the same (max_slots, cache_len) grid — both
+    pools co-shard slot-for-slot, which is what keeps draft proposals and
+    target verify on the same device rows. When ``context_parallel``
+    (long_500k, batch=1): cache LENGTH over "data"."""
     dp = _dp_axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n_dp = 1

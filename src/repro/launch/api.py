@@ -1,0 +1,175 @@
+"""Unified serving API surface (DESIGN.md §11).
+
+One request/response vocabulary for every engine:
+
+* ``SamplingParams`` — the sampling/stream configuration both engines bake
+  into their cached traces (temperature, top_k, pad_id, eos_id, seed). The
+  ``eos_id == pad_id`` validation that used to be duplicated in both engine
+  constructors lives in ONE ``__post_init__`` here. Engines still accept
+  the legacy loose kwargs through a deprecation shim
+  (``SamplingParams.resolve``) that constructs the dataclass — old call
+  sites keep working bit-identically, new call sites pass the dataclass.
+* ``Request`` / ``RequestResult`` — both engines accept the same request
+  and (via ``engine.run``) return the same result: the generated tokens,
+  ``n_generated``, a ``finish_reason`` from the failure taxonomy
+  (``eos | budget | error``), and the virtual-clock queueing delay.
+* typed exceptions — ``AdmissionError`` (request rejected by validation or
+  admission control; subclasses ``ValueError`` so pre-taxonomy callers and
+  tests keep catching it) and ``CapabilityError`` (the model/engine cannot
+  do what was asked, e.g. speculative decoding on a recurrent-state arch;
+  subclasses ``RuntimeError`` for the same reason), plus ``PoolError`` for
+  slot-pool invariant violations (scheduler bugs, not user errors).
+* ``make_engine(model, params, mode=...)`` — factory over
+  ``closed | continuous | speculative`` so callers (benchmarks/decode.py,
+  examples) stop branching on engine classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import numpy as np
+
+
+class ServeError(Exception):
+    """Base of the serving failure taxonomy (ROADMAP item 1)."""
+
+
+class AdmissionError(ServeError, ValueError):
+    """Request rejected at validation/admission time: it could never be
+    scheduled (doesn't fit the cache, exceeds the token budget, malformed
+    engine configuration). Subclasses ``ValueError`` so legacy callers
+    catching the pre-taxonomy exception keep working."""
+
+
+class CapabilityError(ServeError, RuntimeError):
+    """The engine/model cannot perform the requested operation at all —
+    e.g. speculative decoding on a recurrent-state arch (no structural
+    rollback of SSM/RWKV state) or with sampling temperature (the k-token
+    rejection guarantee is only implemented for greedy)."""
+
+
+class PoolError(ServeError, RuntimeError):
+    """Slot-pool invariant violation (double alloc/free, alloc on a full
+    pool): a scheduler bug, not a user error."""
+
+
+FINISH_REASONS = ("eos", "budget", "error")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Sampling/stream configuration shared by every engine and by
+    ``Model.generate``. Frozen: engines bake these values into their cached
+    traces, so mutating them after construction could silently not apply —
+    build a new engine (or a new dataclass) to change them."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    pad_id: int = 0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise AdmissionError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise AdmissionError(f"top_k must be >= 0, got {self.top_k}")
+        if self.eos_id is not None and self.eos_id == self.pad_id:
+            raise AdmissionError(
+                f"eos_id == pad_id ({self.eos_id}): finished rows emit "
+                f"pad_id, so the host could not find the EOS position in "
+                f"outputs")
+
+    _LEGACY = ("temperature", "top_k", "pad_id", "eos_id", "seed")
+
+    @classmethod
+    def resolve(cls, sampling: Optional["SamplingParams"],
+                legacy: dict) -> "SamplingParams":
+        """Deprecation shim: merge the legacy loose kwargs
+        (``temperature=..., eos_id=...``) into a ``SamplingParams``.
+
+        ``legacy`` maps kwarg name → value-or-None, where None means "not
+        passed" (every legacy kwarg's historical None default means the
+        dataclass default anyway, so the mapping is lossless). Passing any
+        legacy kwarg warns ``DeprecationWarning``; passing both a dataclass
+        AND legacy kwargs is an error."""
+        passed = {k: v for k, v in legacy.items() if v is not None}
+        if sampling is not None:
+            if passed:
+                raise AdmissionError(
+                    f"pass sampling=SamplingParams(...) OR the legacy "
+                    f"kwargs {sorted(passed)}, not both")
+            return sampling
+        if passed:
+            warnings.warn(
+                f"loose sampling kwargs {sorted(passed)} are deprecated; "
+                f"pass sampling=SamplingParams(...) instead",
+                DeprecationWarning, stacklevel=3)
+        return cls(**{k: v for k, v in passed.items()})
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a token prompt (+ precomputed frontend
+    embeddings for VLM/enc-dec archs). ``max_new_tokens`` caps THIS
+    request's generation (None = the engine call's gen length); ``arrival``
+    is the virtual-clock arrival tick (open-stream serving only)."""
+
+    tokens: np.ndarray                       # (L,) int32
+    frontend: Optional[np.ndarray] = None    # (F, D) model dtype
+    max_new_tokens: Optional[int] = None
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Uniform per-request outcome from ``engine.run`` (both engines).
+
+    ``tokens`` are the REAL generated tokens (up to and including EOS,
+    capped by the request budget — no pad tail); ``finish_reason`` is the
+    failure-taxonomy verdict; ``delay_ticks`` is the virtual-clock
+    queueing delay (0.0 for the closed-batch engine, which admits
+    everything immediately)."""
+
+    tokens: np.ndarray                       # (n_generated,) int32
+    n_generated: int
+    finish_reason: str                       # "eos" | "budget" | "error"
+    delay_ticks: float = 0.0
+    error: Optional[str] = None              # set iff finish_reason=="error"
+
+    def __post_init__(self):
+        assert self.finish_reason in FINISH_REASONS, self.finish_reason
+
+
+def make_engine(model, params, *, mode: str = "closed",
+                sampling: Optional[SamplingParams] = None, **kwargs):
+    """Engine factory: ``closed`` → GenerationEngine, ``continuous`` →
+    ContinuousEngine, ``speculative`` → ContinuousEngine with a draft
+    model attached (requires ``draft_model=``, ``draft_params=`` and a
+    positive ``spec_k`` in ``kwargs``). Extra kwargs pass through to the
+    engine constructor (``cache_len`` etc. for the open-stream modes)."""
+    from repro.launch import serve                    # circular-free: lazy
+
+    if mode == "closed":
+        return serve.GenerationEngine(model, params, sampling=sampling,
+                                      **kwargs)
+    if mode == "continuous":
+        return serve.ContinuousEngine(model, params, sampling=sampling,
+                                      **kwargs)
+    if mode == "speculative":
+        if kwargs.get("draft_model") is None or \
+                kwargs.get("draft_params") is None:
+            raise AdmissionError(
+                "mode='speculative' requires draft_model= and draft_params=")
+        kwargs.setdefault("spec_k", 4)
+        if kwargs["spec_k"] <= 0:
+            raise AdmissionError(
+                f"mode='speculative' requires spec_k > 0, got "
+                f"{kwargs['spec_k']}")
+        return serve.ContinuousEngine(model, params, sampling=sampling,
+                                      **kwargs)
+    raise AdmissionError(
+        f"unknown engine mode {mode!r} (closed | continuous | speculative)")

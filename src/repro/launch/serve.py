@@ -15,13 +15,31 @@ Two engines share the model's jit-resident decode seam (DESIGN.md §6/§10):
   slots BETWEEN segments — no recompile under churn; admission is
   controlled by a token budget; outputs stream per request as rows finish.
 
+``ContinuousEngine`` optionally runs **speculative decoding** on the same
+slot-pool seam (DESIGN.md §11): a draft model proposes ``spec_k`` tokens
+per live slot (one fixed-shape scan over a paired draft cache pool), then
+ONE batched target verify forward over ``(max_slots, spec_k + 1)`` commits
+the accepted prefix of every slot via the existing ``n_gen``-delta
+protocol and rolls the rejected suffix back structurally (``pos`` is the
+only rollback — stale KV rows beyond it are masked out and re-written).
+Greedy speculative output is bit-identical to non-speculative greedy.
+
+Both engines speak the unified API from ``repro.launch.api``:
+``SamplingParams`` (legacy loose kwargs still work via a deprecation
+shim), ``Request``/``RequestResult`` through ``engine.run``, the typed
+``AdmissionError``/``CapabilityError``/``PoolError`` taxonomy, and the
+``make_engine`` factory.
+
 Compile count stays bounded in both: one executable per prompt bucket
-(prefill / closed-batch generate) plus exactly one decode-segment program.
+(prefill / closed-batch generate) plus exactly one decode-segment program
+(speculative: one draft-propose plus one verify program).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
       --requests 16 --gen 32 --temperature 0.8 --top-k 40
   PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
       --continuous --requests 32 --slots 8 --seg-len 8 --arrival-rate 0.5
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-tiny --smoke \
+      --continuous --speculative-draft layers:1 --spec-k 4 --requests 32
 """
 from __future__ import annotations
 
@@ -38,20 +56,17 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticCorpus
+from repro.launch.api import (AdmissionError, CapabilityError, PoolError,
+                              Request, RequestResult, SamplingParams,
+                              ServeError, make_engine)
 from repro.models.model import Model, build_model
 
-
-@dataclasses.dataclass
-class Request:
-    """One generation request: a token prompt (+ precomputed frontend
-    embeddings for VLM/enc-dec archs). ``max_new_tokens`` caps THIS
-    request's generation (None = the engine call's gen length); ``arrival``
-    is the virtual-clock arrival tick (open-stream serving only)."""
-
-    tokens: np.ndarray                       # (L,) int32
-    frontend: Optional[np.ndarray] = None    # (F, D) model dtype
-    max_new_tokens: Optional[int] = None
-    arrival: float = 0.0
+__all__ = [
+    "Request", "RequestResult", "SamplingParams", "ServeError",
+    "AdmissionError", "CapabilityError", "PoolError", "make_engine",
+    "SlotPool", "GenerationEngine", "ContinuousEngine", "draft_from_target",
+    "main",
+]
 
 
 def _bucket_len(n: int, lo: int = 8) -> int:
@@ -72,7 +87,8 @@ class SlotPool:
 
     def __init__(self, n_slots: int):
         if n_slots <= 0:
-            raise ValueError(f"n_slots must be positive, got {n_slots}")
+            raise AdmissionError(
+                f"n_slots must be positive, got {n_slots}")
         self.n_slots = n_slots
         self._free = list(range(n_slots - 1, -1, -1))   # lowest slot first
         self._live: set = set()
@@ -90,7 +106,7 @@ class SlotPool:
 
     def alloc(self) -> int:
         if not self._free:
-            raise RuntimeError("SlotPool.alloc on a full pool")
+            raise PoolError("SlotPool.alloc on a full pool")
         s = self._free.pop()
         self._live.add(s)
         if s in self._used:
@@ -101,7 +117,7 @@ class SlotPool:
 
     def release(self, slot: int):
         if slot not in self._live:
-            raise RuntimeError(f"SlotPool.release of non-live slot {slot}")
+            raise PoolError(f"SlotPool.release of non-live slot {slot}")
         self._live.remove(slot)
         self._free.append(slot)
 
@@ -121,23 +137,27 @@ class GenerationEngine:
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 8,
-                 temperature: float = 0.0, top_k: int = 0, pad_id: int = 0,
+                 sampling: Optional[SamplingParams] = None,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None, pad_id: Optional[int] = None,
                  eos_id: Optional[int] = None, pad_batches: bool = True,
-                 seed: int = 0):
+                 seed: Optional[int] = None):
+        # eos_id == pad_id etc. validate in SamplingParams.__post_init__;
+        # the loose kwargs are a deprecation shim (None = not passed)
+        sp = SamplingParams.resolve(sampling, dict(
+            temperature=temperature, top_k=top_k, pad_id=pad_id,
+            eos_id=eos_id, seed=seed))
+        self.sampling = sp
         self.model = model
         self.params = params
-        self.seed = seed
+        self.seed = sp.seed
         self._calls = 0            # advances the default sampling stream
         self.max_batch = max_batch
         # read-only: sampling config is baked into the cached traces
-        self._temperature = float(temperature)
-        self._top_k = int(top_k)
-        self.pad_id = pad_id
-        if eos_id is not None and eos_id == pad_id:
-            raise ValueError(
-                f"eos_id == pad_id ({eos_id}): finished rows emit pad_id, "
-                f"so the host could not find the EOS position in outputs")
-        self.eos_id = eos_id
+        self._temperature = float(sp.temperature)
+        self._top_k = int(sp.top_k)
+        self.pad_id = sp.pad_id
+        self.eos_id = sp.eos_id
         # pad residual groups (B < max_batch) with dummy rows so every call
         # shares the (max_batch, bucket) shape — one compile per
         # (bucket, gen), not one per distinct residual size
@@ -282,6 +302,43 @@ class GenerationEngine:
         total = self.stats["tokens_generated"] + self.stats["tokens_padded"]
         return self.stats["tokens_generated"] / max(total, 1)
 
+    def run(self, requests: Sequence[Request], max_new_tokens: int,
+            key=None) -> tuple[list[RequestResult], dict]:
+        """Unified surface: the same (results, report) contract as
+        ``ContinuousEngine.run``. The closed-batch engine admits everything
+        immediately, so ``delay_ticks`` is always 0; malformed requests
+        surface as ``finish_reason='error'`` rather than raising."""
+        results: list[Optional[RequestResult]] = [None] * len(requests)
+        good, idxmap = [], []
+        for i, r in enumerate(requests):
+            err = self._request_error(i, r)
+            if err is not None:
+                results[i] = RequestResult(np.zeros(0, np.int32), 0,
+                                           "error", error=err)
+            else:
+                good.append(r)
+                idxmap.append(i)
+        outs = self.generate(good, max_new_tokens, key=key) if good else []
+        for j, i in enumerate(idxmap):
+            b = min(good[j].max_new_tokens or max_new_tokens,
+                    max_new_tokens)
+            nreal = self._real_len(outs[j], b)
+            toks = np.asarray(outs[j][:nreal], np.int32)
+            eos = (self.eos_id is not None and nreal > 0
+                   and int(toks[-1]) == self.eos_id)
+            results[i] = RequestResult(toks, nreal,
+                                       "eos" if eos else "budget")
+        report = {"mode": "closed", "goodput": self.goodput, **self.stats}
+        return results, report
+
+    def _request_error(self, i: int, r: Request) -> Optional[str]:
+        if self._needs_frontend and r.frontend is None:
+            return (f"request {i}: {self.model.cfg.name} requires frontend "
+                    f"embeddings on every request")
+        if not self._needs_frontend and r.frontend is not None:
+            return f"request {i}: frontend given for a text-only arch"
+        return None
+
 
 class ContinuousEngine:
     """In-flight continuous batching over a slot-pool KV arena.
@@ -316,15 +373,21 @@ class ContinuousEngine:
     def __init__(self, model: Model, params, *, cache_len: int,
                  max_slots: int = 8, seg_len: int = 8,
                  prefill_batch: int = 2, token_budget: Optional[int] = None,
-                 temperature: float = 0.0, top_k: int = 0,
-                 pad_id: int = 0, eos_id: Optional[int] = None,
-                 seed: int = 0):
+                 sampling: Optional[SamplingParams] = None,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None,
+                 pad_id: Optional[int] = None,
+                 eos_id: Optional[int] = None,
+                 seed: Optional[int] = None,
+                 draft_model: Optional[Model] = None, draft_params=None,
+                 spec_k: int = 0):
         if max_slots <= 0 or seg_len <= 0 or prefill_batch <= 0:
-            raise ValueError("max_slots, seg_len, prefill_batch must be > 0")
-        if eos_id is not None and eos_id == pad_id:
-            raise ValueError(
-                f"eos_id == pad_id ({eos_id}): finished slots emit pad_id, "
-                f"so streamed outputs could not be disambiguated")
+            raise AdmissionError(
+                "max_slots, seg_len, prefill_batch must be > 0")
+        sp = SamplingParams.resolve(sampling, dict(
+            temperature=temperature, top_k=top_k, pad_id=pad_id,
+            eos_id=eos_id, seed=seed))
+        self.sampling = sp
         self.model = model
         self.params = params
         self.cache_len = int(cache_len)
@@ -334,21 +397,60 @@ class ContinuousEngine:
         # admission reservation cap: Σ_live (frontend + bucket + budget)
         self.token_budget = (int(token_budget) if token_budget is not None
                              else self.max_slots * self.cache_len)
-        self._temperature = float(temperature)
-        self._top_k = int(top_k)
-        self.pad_id = pad_id
-        self.eos_id = eos_id
-        self.seed = seed
+        self._temperature = float(sp.temperature)
+        self._top_k = int(sp.top_k)
+        self.pad_id = sp.pad_id
+        self.eos_id = sp.eos_id
+        self.seed = sp.seed
         self._calls = 0
         self._exact_lens = model._has_recurrent_state()
         self._needs_frontend = (model.cfg.family == "vlm"
                                 or model.cfg.is_encdec)
+        # speculative decoding: a draft model proposes spec_k tokens per
+        # live slot, one target verify forward commits/rolls back (§11)
+        self.spec_k = int(spec_k)
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        if self.spec_k < 0:
+            raise AdmissionError(f"spec_k must be >= 0, got {spec_k}")
+        if self.spec_k:
+            if draft_model is None or draft_params is None:
+                raise AdmissionError(
+                    f"spec_k={spec_k} requires draft_model= and "
+                    f"draft_params=")
+            if self._temperature > 0 or self._top_k > 0:
+                raise CapabilityError(
+                    "speculative decoding is greedy-only: under argmax the "
+                    "k-token rejection guarantee degenerates to exact "
+                    "prefix match (bit-parity); sampling acceptance is not "
+                    "implemented — use spec_k=0 with temperature > 0")
+            if model._has_recurrent_state():
+                raise CapabilityError(
+                    f"{model.cfg.name}: speculative decoding needs "
+                    f"structural KV rollback by position; recurrent state "
+                    f"(SSM/RWKV) cannot roll back a rejected suffix — use "
+                    f"spec_k=0")
+            if draft_model._has_recurrent_state():
+                raise CapabilityError(
+                    f"draft {draft_model.cfg.name}: recurrent draft state "
+                    f"cannot roll back rejected proposals — use an "
+                    f"attention draft")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise AdmissionError(
+                    f"draft vocab {draft_model.cfg.vocab_size} != target "
+                    f"vocab {model.cfg.vocab_size}")
         self._prefills: dict = {}
+        self._draft_prefills: dict = {}
         self._seg = None
+        self._draft = None
+        self._verify = None
         self.stats = {"prefill_launches": 0, "segments": 0,
                       "prefill_slot_rows": 0, "decode_slot_steps": 0,
                       "tokens_real": 0, "slot_allocs": 0, "max_reserved": 0,
-                      "prefill_traces": 0, "decode_traces": 0}
+                      "prefill_traces": 0, "decode_traces": 0,
+                      "verify_launches": 0, "target_slot_forwards": 0,
+                      "spec_tokens_committed": 0, "draft_traces": 0,
+                      "verify_traces": 0, "draft_prefill_traces": 0}
 
     # ------------------------------------------------------ jitted seams --
     def _prefill_fn(self, bucket: int):
@@ -377,12 +479,72 @@ class ContinuousEngine:
             self._seg = jax.jit(counted, donate_argnums=(1,))
         return self._seg
 
+    def _draft_prefill_fn(self, bucket: int):
+        """Mirror the target prefill into the draft cache pool — one
+        executable per prompt bucket, like the target's."""
+        fn = self._draft_prefills.get(bucket)
+        if fn is None:
+            def counted(dparams, draft, batch, slot_idx, prompt_lens=None):
+                self.stats["draft_prefill_traces"] += 1
+                return self.draft_model.prefill_state_into(
+                    dparams, draft, batch, slot_idx,
+                    cache_len=self.cache_len, prompt_lens=prompt_lens)
+            fn = jax.jit(counted, donate_argnums=(1,))
+            self._draft_prefills[bucket] = fn
+        return fn
+
+    def _draft_fn(self):
+        """ONE draft-propose executable: a fixed-shape greedy scan over the
+        draft pool, driven by the TARGET's authoritative tok/pos/run."""
+        if self._draft is None:
+            def counted(dparams, draft, tok, pos, active, done):
+                self.stats["draft_traces"] += 1
+                return self.draft_model.draft_propose(
+                    dparams, draft, tok, pos, active & ~done,
+                    spec_k=self.spec_k)
+            self._draft = jax.jit(counted, donate_argnums=(1,))
+        return self._draft
+
+    def _verify_fn(self):
+        """ONE verify executable: a single batched (max_slots, spec_k + 1)
+        target forward commits accepted prefixes and rolls back the rest."""
+        if self._verify is None:
+            def counted(params, slots, props):
+                self.stats["verify_traces"] += 1
+                return self.model.spec_verify(
+                    params, slots, props, eos_id=self.eos_id,
+                    pad_id=self.pad_id)
+            self._verify = jax.jit(counted, donate_argnums=(1,))
+        return self._verify
+
     @property
     def compile_count(self) -> int:
-        return self.stats["prefill_traces"] + self.stats["decode_traces"]
+        return (self.stats["prefill_traces"] + self.stats["decode_traces"]
+                + self.stats["draft_prefill_traces"]
+                + self.stats["draft_traces"] + self.stats["verify_traces"])
 
     def _bucket(self, n: int) -> int:
         return n if self._exact_lens else _bucket_len(n)
+
+    def _reservation(self, i: int, r: Request, max_new_tokens: int) -> tuple:
+        """Admission-time validation for one request; raises
+        ``AdmissionError`` if it could never be scheduled. Returns
+        (budget, reservation)."""
+        if self._needs_frontend and r.frontend is None:
+            raise AdmissionError(
+                f"request {i}: frontend embeddings required")
+        b = min(r.max_new_tokens or max_new_tokens, max_new_tokens)
+        res = self.model._prefix_len + self._bucket(len(r.tokens)) + b
+        if res > self.cache_len:
+            raise AdmissionError(
+                f"request {i}: frontend {self.model._prefix_len} + prompt "
+                f"bucket {self._bucket(len(r.tokens))} + budget {b} = "
+                f"{res} exceeds cache_len {self.cache_len}")
+        if res > self.token_budget:
+            raise AdmissionError(
+                f"request {i}: reservation {res} exceeds token_budget "
+                f"{self.token_budget} — it could never be admitted")
+        return b, res
 
     # -------------------------------------------------------- the server --
     def serve(self, requests: Sequence[Request], max_new_tokens: int, *,
@@ -400,27 +562,21 @@ class ContinuousEngine:
                                      self._calls)
         self._calls += 1
         n = len(requests)
-        F = self.model._prefix_len
         budgets, resv = [], []
         for i, r in enumerate(requests):
-            if self._needs_frontend and r.frontend is None:
-                raise ValueError(f"request {i}: frontend embeddings required")
-            b = min(r.max_new_tokens or max_new_tokens, max_new_tokens)
+            b, res = self._reservation(i, r, max_new_tokens)
             budgets.append(b)
-            res = F + self._bucket(len(r.tokens)) + b
-            if res > self.cache_len:
-                raise ValueError(
-                    f"request {i}: frontend {F} + prompt bucket "
-                    f"{self._bucket(len(r.tokens))} + budget {b} = {res} "
-                    f"exceeds cache_len {self.cache_len}")
-            if res > self.token_budget:
-                raise ValueError(
-                    f"request {i}: reservation {res} exceeds token_budget "
-                    f"{self.token_budget} — it could never be admitted")
             resv.append(res)
 
         pool = SlotPool(self.max_slots)
-        slots = self.model.init_slot_state(self.max_slots, self.cache_len)
+        draft = None
+        if self.spec_k:
+            spec = self.model.init_spec_state(
+                self.draft_model, self.max_slots, self.cache_len)
+            slots, draft = spec.slots, spec.draft
+        else:
+            slots = self.model.init_slot_state(self.max_slots,
+                                               self.cache_len)
         arr_order = sorted(range(n), key=lambda i: (requests[i].arrival, i))
         arrived: deque = deque()
         p = 0                       # next not-yet-arrived index in arr_order
@@ -501,6 +657,13 @@ class ContinuousEngine:
                     self.params, slots, batch, jnp.asarray(sidx),
                     jnp.asarray(buds), jax.random.fold_in(key, ev),
                     prompt_lens=pl)
+                if self.spec_k:
+                    # mirror the rows into the draft cache pool — the
+                    # draft launch overlaps the (much larger) target
+                    # prefill, so the virtual clock charges nothing extra
+                    draft = self._draft_prefill_fn(bucket)(
+                        self.draft_params, draft, batch,
+                        jnp.asarray(sidx), prompt_lens=pl)
                 ev += 1
                 clock += max(1, math.ceil(bucket / self.seg_len))
                 self.stats["prefill_launches"] += 1
@@ -516,12 +679,30 @@ class ContinuousEngine:
                                            and t0 == self.eos_id):
                         retire(int(sidx[r]), i)
             if slot_req:
-                emitted, slots = self._seg_fn()(
-                    self.params, slots, jax.random.fold_in(key, ev))
-                ev += 1
-                clock += self.seg_len
-                self.stats["segments"] += 1
-                self.stats["decode_slot_steps"] += self.max_slots * self.seg_len
+                if self.spec_k:
+                    # speculative round: draft proposes spec_k per live
+                    # slot, ONE target verify forward commits 1..k+1
+                    # tokens per slot for ~1 virtual-clock tick
+                    props, draft = self._draft_fn()(
+                        self.draft_params, draft, slots.tok,
+                        slots.state.pos, slots.active, slots.done)
+                    emitted, slots = self._verify_fn()(
+                        self.params, slots, props)
+                    clock += 1
+                    self.stats["verify_launches"] += 1
+                    # every slot still in slot_req is running (done rows
+                    # retire the moment they're read back)
+                    self.stats["target_slot_forwards"] += len(slot_req)
+                    self.stats["decode_slot_steps"] += \
+                        self.max_slots * (self.spec_k + 1)
+                else:
+                    emitted, slots = self._seg_fn()(
+                        self.params, slots, jax.random.fold_in(key, ev))
+                    ev += 1
+                    clock += self.seg_len
+                    self.stats["segments"] += 1
+                    self.stats["decode_slot_steps"] += \
+                        self.max_slots * self.seg_len
                 em = np.asarray(emitted)
                 ngen = np.asarray(slots.n_gen)
                 done = np.asarray(slots.done)
@@ -529,18 +710,20 @@ class ContinuousEngine:
                     k = int(ngen[s] - slot_ngen[s])   # done is monotone in a
                     for t in em[s, :k]:               # segment → real tokens
                         emit(i, int(t))               # are a prefix
+                    if self.spec_k:
+                        self.stats["spec_tokens_committed"] += k
                     slot_ngen[s] = ngen[s]
                     if done[s]:
                         retire(s, i)
             elif not arrived:
                 if p >= n:          # nothing live, queued, or future: bug
-                    raise RuntimeError(
+                    raise PoolError(
                         "scheduler stalled with requests outstanding")
                 clock = max(clock, requests[arr_order[p]].arrival)  # idle jump
             else:
                 # arrived-but-unadmitted with an EMPTY pool is impossible:
                 # reserved == 0 and every reservation was validated above
-                raise RuntimeError("admission stalled with free slots")
+                raise PoolError("admission stalled with free slots")
 
         self.stats["slot_allocs"] = pool.allocs
         token_slots = (self.stats["prefill_slot_rows"]
@@ -566,8 +749,91 @@ class ContinuousEngine:
             "max_reserved": self.stats["max_reserved"],
             "prefill_traces": self.stats["prefill_traces"],
             "decode_traces": self.stats["decode_traces"],
+            "delays": [float(d) for d in delays],
         }
+        if self.spec_k:
+            fw = self.stats["target_slot_forwards"]
+            committed = self.stats["spec_tokens_committed"]
+            report.update({
+                "spec_k": self.spec_k,
+                "verify_launches": self.stats["verify_launches"],
+                "target_slot_forwards": fw,
+                "spec_tokens_committed": committed,
+                # each verify forward commits 1 token for free (the bonus
+                # token) plus 0..k accepted proposals — this is the
+                # fraction of proposal slots that landed
+                "acceptance_rate": (committed - fw) / max(fw * self.spec_k,
+                                                          1),
+                "draft_traces": self.stats["draft_traces"],
+                "verify_traces": self.stats["verify_traces"],
+                "draft_prefill_traces": self.stats["draft_prefill_traces"],
+            })
         return [np.asarray(o, np.int32) for o in outputs], report
+
+    def run(self, requests: Sequence[Request], max_new_tokens: int, *,
+            key=None) -> tuple[list[RequestResult], dict]:
+        """Unified surface over ``serve``: inadmissible requests come back
+        as ``finish_reason='error'`` (with the admission message) instead
+        of failing the whole trace; admissible ones carry their
+        virtual-clock queueing delay."""
+        results: list[Optional[RequestResult]] = [None] * len(requests)
+        good, idxmap = [], []
+        for i, r in enumerate(requests):
+            try:
+                self._reservation(i, r, max_new_tokens)
+            except AdmissionError as e:
+                results[i] = RequestResult(np.zeros(0, np.int32), 0,
+                                           "error", error=str(e))
+            else:
+                good.append(r)
+                idxmap.append(i)
+        if good:
+            outs, report = self.serve(good, max_new_tokens, key=key)
+        else:
+            outs, report = [], {"requests": 0}
+        for j, i in enumerate(idxmap):
+            toks = outs[j]
+            eos = (self.eos_id is not None and len(toks) > 0
+                   and int(toks[-1]) == self.eos_id)
+            results[i] = RequestResult(
+                toks, int(len(toks)), "eos" if eos else "budget",
+                delay_ticks=float(report["delays"][j]))
+        return results, report
+
+
+def draft_from_target(model: Model, params, spec: str):
+    """Build a (draft_model, draft_params) pair from the target itself.
+
+    ``"self"`` — the target doubles as its own draft (acceptance == 1.0:
+    useful for parity/boundary tests, not for speed). ``"layers:N"`` — a
+    depth-N truncation sharing the target's embed/head and its FIRST N
+    stacked layer groups (no retraining, correlated predictions → nonzero
+    acceptance on the seeded benchmark trace). Truncation needs a
+    single-group decoder (the dense families); pass an explicit draft for
+    mixed-program archs."""
+    if spec == "self":
+        return model, params
+    if not spec.startswith("layers:"):
+        raise AdmissionError(
+            f"unknown draft spec {spec!r} (self | layers:N)")
+    n = int(spec.split(":", 1)[1])
+    cfg = model.cfg
+    if n <= 0 or n >= cfg.n_layers:
+        raise AdmissionError(
+            f"layers:{n} draft needs 0 < N < n_layers={cfg.n_layers}")
+    if len(cfg.decoder_program()) != 1:
+        raise CapabilityError(
+            f"{cfg.name}: layers:N draft slicing needs a single-group "
+            f"decoder program; pass an explicit draft model")
+    dcfg = dataclasses.replace(cfg, n_layers=n)
+    tree = params.tree() if hasattr(params, "tree") else params
+    dparams = dict(tree)
+    dparams["decoder"] = {
+        "groups": [jax.tree_util.tree_map(lambda x: x[:n],
+                                          tree["decoder"]["groups"][0])],
+        "final_norm": tree["decoder"]["final_norm"],
+    }
+    return build_model(dcfg), dparams
 
 
 def main(argv=None):
@@ -599,6 +865,15 @@ def main(argv=None):
                     help="continuous: Poisson arrivals per virtual tick")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="continuous: admission cap on reserved tokens")
+    ap.add_argument("--speculative-draft", default=None,
+                    help="continuous: enable speculative decoding with a "
+                         "draft built from the target — 'self' (target as "
+                         "its own draft; parity testing) or 'layers:N' "
+                         "(depth-N truncation sharing embed/head); greedy "
+                         "only, output is bit-identical to non-speculative")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative: draft proposals per slot per verify "
+                         "round (the verify forward is (slots, k+1) wide)")
     ap.add_argument("--flash-min-len", type=int, default=None,
                     help="prefill dispatches causal self-attention to the "
                          "Pallas flash kernels when prompt_len >= this "
@@ -636,20 +911,30 @@ def main(argv=None):
         requests.append(Request(tokens=toks[i, :n], frontend=fe,
                                 max_new_tokens=gen_i, arrival=arrival))
 
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, eos_id=args.eos_id,
+                              seed=args.seed)
     if args.continuous:
         cache_len = _bucket_len(args.prompt_len) + args.gen + \
             (cfg.frontend_len if (cfg.is_encdec or cfg.family == "vlm")
              else 0)
-        engine = ContinuousEngine(
-            model, params, cache_len=cache_len, max_slots=args.slots,
+        spec_kw: dict = {}
+        mode = "continuous"
+        if args.speculative_draft:
+            dm, dp = draft_from_target(model, params, args.speculative_draft)
+            spec_kw = dict(draft_model=dm, draft_params=dp,
+                           spec_k=args.spec_k)
+            mode = "speculative"
+        engine = make_engine(
+            model, params, mode=mode, sampling=sampling,
+            cache_len=cache_len, max_slots=args.slots,
             seg_len=args.seg_len, prefill_batch=args.prefill_batch,
-            token_budget=args.token_budget, temperature=args.temperature,
-            top_k=args.top_k, eos_id=args.eos_id, seed=args.seed)
+            token_budget=args.token_budget, **spec_kw)
         t0 = time.time()
         outs, report = engine.serve(requests, args.gen,
                                     key=jax.random.PRNGKey(args.seed + 1))
         t_serve = time.time() - t0
-        print(f"continuous: {args.requests} requests, {args.slots} slots, "
+        print(f"{mode}: {args.requests} requests, {args.slots} slots, "
               f"seg_len {args.seg_len}, token_budget {engine.token_budget}")
         print(f"  wall (incl. {engine.compile_count} compiles): "
               f"{t_serve*1e3:.1f} ms")
@@ -658,14 +943,18 @@ def main(argv=None):
               f"token-slots), slot reuse {report['slot_reuse']}")
         print(f"  queueing delay (virtual ticks): "
               f"p50 {report['delay_p50']:.1f}  p99 {report['delay_p99']:.1f}")
+        if engine.spec_k:
+            print(f"  speculative: k={report['spec_k']}, acceptance "
+                  f"{report['acceptance_rate']:.3f}, "
+                  f"{report['target_slot_forwards']} target forwards for "
+                  f"{report['spec_tokens_committed']} committed tokens")
         print("sample generations (token ids):")
         for o in outs[:2]:
             print("  ", [int(t) for t in o[:16]])
         return outs
 
-    engine = GenerationEngine(model, params, max_batch=args.batch,
-                              temperature=args.temperature,
-                              top_k=args.top_k, eos_id=args.eos_id)
+    engine = make_engine(model, params, mode="closed", sampling=sampling,
+                         max_batch=args.batch)
     t0 = time.time()
     outs = engine.generate(requests, args.gen,
                            key=jax.random.PRNGKey(args.seed + 1))

@@ -261,6 +261,44 @@ def decode_attention(p, x, cfg, cache, pos, *, window=0, active=None):
     return matmul(out, p["wo"]), {"k": k, "v": v}
 
 
+def verify_attention(p, x, cfg, cache, pos, *, window=0, active=None):
+    """Multi-token masked verify step (speculative decoding, DESIGN.md §11):
+    x (B, W, D) is the current token + the draft's proposals, W = k+1.
+
+    The prefill path at width W against a live KV arena: all W new K/V rows
+    are written at ``pos[b] .. pos[b]+W-1`` in one scatter, then every
+    query position i attends causally over the first ``pos[b]+i+1`` cache
+    entries — so logits[:, i] is bit-identical to what ``decode_attention``
+    would produce after sequentially consuming tokens 0..i. Rejected
+    suffixes need no erasure: the caller rolls ``pos`` back and the stale
+    rows beyond it are never attended (the mask is ``kj > position``) and
+    are overwritten when the slot re-advances — the same
+    OOB-scatter-drop/index-recoverability trick the slot pool already
+    relies on. ``active`` masks retired slots exactly as in
+    ``decode_attention`` (their W writes all land out of bounds)."""
+    B, W, _ = x.shape
+    S = cache["k"].shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _qkv(p, x, x, cfg, positions, positions)
+    rows = jnp.arange(B)[:, None]                    # (B, 1) × (B, W) writes
+    wpos = positions if active is None else \
+        jnp.where(active[:, None], positions, S)     # inactive rows → OOB
+    k = cache["k"].at[rows, wpos].set(
+        k_new.astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[rows, wpos].set(
+        v_new.astype(cache["v"].dtype), mode="drop")
+    scores = _gqa_scores(q, k, cfg)                  # (B,hk,g,W,S)
+    kj = jnp.arange(S)[None, None, :]
+    invalid = kj > positions[:, :, None]             # (B, W, S) per-query
+    if window:
+        invalid |= kj <= positions[:, :, None] - window
+    scores = jnp.where(invalid[:, None, None], NEG_INF, scores)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, cfg, x.dtype)
+    return matmul(out, p["wo"]), {"k": k, "v": v}
+
+
 def cross_kv(p, memory, cfg):
     """Precompute cross-attention K/V from encoder memory (prefill-time)."""
     B, F, _ = memory.shape
@@ -273,10 +311,12 @@ def cross_kv(p, memory, cfg):
 
 
 def cross_decode(p, x, cfg, cache):
-    """Decode-time cross-attention against cached memory K/V (no rope)."""
-    B = x.shape[0]
+    """Decode-time cross-attention against cached memory K/V (no rope).
+    Length-agnostic in x (B, L, D): the verify step reuses it at L = k+1
+    (cross-attention is non-causal, so no per-position masking needed)."""
+    B, L, _ = x.shape
     h, dh = cfg.n_heads, cfg.head_dim_
-    q = matmul(x, p["wq"]).reshape(B, 1, h, dh)
+    q = matmul(x, p["wq"]).reshape(B, L, h, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
     scores = _gqa_scores(q, cache["k"], cfg)

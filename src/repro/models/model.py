@@ -120,12 +120,54 @@ class SlotState:
         return self.active & ~self.done
 
 
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class SpecState:
+    """Speculative-decoding carry (DESIGN.md §11): the target's slot pool
+    paired with the draft model's cache pool over the same slot grid.
+
+    ``slots`` is authoritative for ALL bookkeeping (tok/active/done/
+    n_gen/budget/pos); the draft half carries only its own caches + a pos
+    vector that is OVERWRITTEN from the target's at every propose launch —
+    after a rejection both pools roll back by index (stale rows beyond
+    ``pos`` are never attended and are overwritten on re-advance), so the
+    two stay consistent without any copy."""
+
+    slots: SlotState              # target pool (authoritative)
+    draft: DecodeState            # draft-model caches over the same grid
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("slots"), self.slots),
+                 (jax.tree_util.GetAttrKey("draft"), self.draft)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def greedy_tokens(logits):
+    """Tie-robust greedy selection: argmax over logits rounded to the
+    model compute dtype (bf16). The fp32 logits of the SAME token stream
+    differ in the last bits between kernel widths (a width-1 decode step
+    and a width-(k+1) verify forward tile their GEMMs differently), so a
+    raw fp32 argmax can flip on sub-bf16-ULP margins — which are compile
+    -shape noise, not model preference, in a bf16-compute model. Rounding
+    first collapses those margins to exact ties (argmax then breaks them
+    by index, identically everywhere); a flip now needs the noise to push
+    a logit across a bf16 boundary AND the top-2 gap under one ULP at
+    once. Every greedy site (generate, prefill sampling, decode_segment,
+    draft_propose, spec_verify) MUST route through here — speculative
+    bit-parity with plain greedy decode depends on it."""
+    return jnp.argmax(logits.astype(jnp.bfloat16), axis=-1).astype(
+        jnp.int32)
+
+
 def sample_logits(logits, key, temperature: float = 0.0, top_k: int = 0):
     """In-jit sampling: greedy / temperature / top-k. logits (B, V) fp32.
     ``temperature``/``top_k`` are static (they change the compiled program);
     the PRNG ``key`` is consumed exactly once per call."""
     if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy_tokens(logits)
     logits = logits.astype(ACC) / temperature
     if top_k > 0 and top_k < logits.shape[-1]:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
@@ -310,15 +352,49 @@ class Model:
         return self._head(params, x), DecodeState(tuple(new_layers),
                                                   state.pos + adv)
 
+    def decode_verify(self, params, state: DecodeState, tokens, active=None):
+        """Verify-mode forward (speculative decoding): tokens (B, W) i32 is
+        the current token + the draft's W-1 proposals. ONE batched forward
+        returns per-position logits (B, W, V) — logits[:, i] is
+        bit-identical to what ``decode_step`` would produce after
+        sequentially consuming tokens[:, :i+1] (the multi-token masked
+        attention reuses the prefill path at width W against the live
+        cache). Positions come from ``state.pos``; the W new KV rows are
+        written at pos..pos+W-1 (dropped out-of-bounds for inactive rows).
+        Returns (logits, new DecodeState with pos advanced by W) — callers
+        that reject a suffix simply roll ``pos`` back (see
+        ``spec_verify``); the over-written KV rows stay recoverable by
+        index. Attention/MLP/MoE archs only: recurrent state cannot roll
+        back (``transformer.sub_verify`` raises)."""
+        params = _as_tree(params)
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], tokens)
+        new_layers = []
+        for g, gp, c in zip(cfg.decoder_program(),
+                            params["decoder"]["groups"], state.layers):
+            x, nc = tf.group_verify(gp, x, g, cfg, c, state.pos,
+                                    active=active)
+            new_layers.append(nc)
+        W = tokens.shape[1]
+        adv = W if active is None else W * active.astype(jnp.int32)
+        return self._head(params, x), DecodeState(tuple(new_layers),
+                                                  state.pos + adv)
+
     def generate(self, params, batch, max_new_tokens: int, *,
                  key=None, temperature: float = 0.0, top_k: int = 0,
                  prompt_lens: Optional[jax.Array] = None,
                  cache_len: Optional[int] = None,
                  eos_id: Optional[int] = None,
-                 gen_lens: Optional[jax.Array] = None, pad_id: int = 0):
+                 gen_lens: Optional[jax.Array] = None, pad_id: int = 0,
+                 sampling=None):
         """Jit-resident generation: prefill + a ``lax.scan`` over decode
         steps with the DecodeState as donated carry and in-jit sampling.
         Returns (tokens (B, max_new_tokens) i32, final DecodeState).
+
+        ``sampling`` takes a ``launch.api.SamplingParams`` (duck-typed to
+        keep the model layer free of launch imports) and overrides the
+        loose ``temperature``/``top_k``/``eos_id``/``pad_id`` kwargs, which
+        remain for backward compatibility.
 
         Wrap in ``jax.jit`` with static ``max_new_tokens`` / ``temperature``
         / ``top_k`` / ``cache_len`` — the whole token loop then lowers to one
@@ -333,6 +409,11 @@ class Model:
         pre-done tokens are bit-identical to the un-masked scan (rows are
         batch-independent). With both None the pre-existing un-masked
         lowering is used unchanged."""
+        if sampling is not None:
+            temperature = sampling.temperature
+            top_k = sampling.top_k
+            eos_id = sampling.eos_id
+            pad_id = sampling.pad_id
         params = _as_tree(params)
         B, T = batch["tokens"].shape
         F = self._prefix_len
@@ -478,6 +559,132 @@ class Model:
 
         slots, emitted = jax.lax.scan(body, slots, keys)
         return emitted.T, slots
+
+    # ------------------------------------- speculative decoding (§11) ------
+    def init_spec_state(self, draft_model: "Model", max_slots: int,
+                        cache_len: int) -> SpecState:
+        """Paired empty pools: target slot arena + draft cache arena over
+        the same (max_slots, cache_len) grid."""
+        return SpecState(
+            slots=self.init_slot_state(max_slots, cache_len),
+            draft=draft_model.init_decode_state(max_slots, cache_len))
+
+    def prefill_state_into(self, params, pool: DecodeState, batch, slot_idx,
+                           *, cache_len: int, prompt_lens=None):
+        """``prefill_into`` for a bare cache pool (the DRAFT half of
+        speculative decoding): prefill the batch and scatter the rows into
+        the pool at ``slot_idx`` — no sampling, no liveness bookkeeping
+        (the target's SlotState is authoritative for both pools). Dummy
+        rows (slot_idx >= max_slots) drop out of bounds as usual."""
+        params = _as_tree(params)
+        slot_idx = jnp.asarray(slot_idx, jnp.int32)
+        _, new_state = self.prefill(params, batch, cache_len,
+                                    prompt_lens=prompt_lens)
+
+        def scat_row(pool_leaf, new_leaf):   # batch dim 1 (layer-stacked)
+            return pool_leaf.at[:, slot_idx].set(
+                new_leaf.astype(pool_leaf.dtype), mode="drop")
+
+        layers = jax.tree_util.tree_map(scat_row, pool.layers,
+                                        new_state.layers)
+        return DecodeState(
+            layers, pool.pos.at[slot_idx].set(new_state.pos, mode="drop"))
+
+    def draft_propose(self, params, draft: DecodeState, tok, pos, run,
+                      *, spec_k: int):
+        """Greedy k-token proposal scan over the draft pool (ONE fixed-shape
+        jitted program, the draft twin of ``decode_segment``).
+
+        ``tok``/``pos``/``run`` come from the TARGET's SlotState — the
+        draft's own ``pos`` is overwritten, which is exactly how rejected
+        speculation rolls the draft pool back (its stale KV rows beyond the
+        target's committed ``pos`` are unreachable by mask). The scan runs
+        ``spec_k + 1`` steps so the draft also consumes its own last
+        proposal: its KV then covers every position the target can commit,
+        accept-all included. Returns (proposals (B, spec_k) i32, new
+        DecodeState)."""
+        params = _as_tree(params)
+        state = DecodeState(draft.layers,
+                            jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                             (tok.shape[0],)))
+
+        def body(carry, _):
+            st, tk = carry
+            logits, st = self.decode_step(params, st, tk, active=run)
+            nxt = greedy_tokens(logits[:, -1])
+            tk = jnp.where(run, nxt, tk[:, 0])[:, None]
+            return (st, tk), nxt
+
+        (state, _), props = jax.lax.scan(body, (state, tok), None,
+                                         length=spec_k + 1)
+        return props.T[:, :spec_k], state
+
+    def spec_verify(self, params, slots: SlotState, proposals, *,
+                    eos_id: Optional[int] = None, pad_id: int = 0):
+        """ONE batched target forward verifies the draft's proposals for
+        every live slot, commits the accepted prefix and rolls back the
+        rejected suffix — greedy only (argmax makes the rejection-sampling
+        guarantee an exact prefix match, so committed streams are
+        bit-identical to non-speculative greedy decode).
+
+        Per running slot with current token w0 = ``tok`` and proposals
+        w1..wk: the width-(k+1) verify forward yields target greedy tokens
+        t0..tk where t_i conditions on w0..w_i. w_{i+1} is accepted iff
+        w_{j+1} == t_j for all j <= i; with ``a`` accepted the candidate
+        commit stream is w1..wa, t_a (the bonus token) — between 1 and k+1
+        new tokens per launch — truncated by the first EOS and the
+        remaining budget exactly like ``decode_segment``. Rollback is
+        structural: ``pos`` is set to the committed length (the verify
+        forward's extra KV rows beyond it are never attended and are
+        re-written when the slot advances), ``tok`` becomes the last
+        committed token (pending, not yet consumed — EOS included).
+
+        Returns (emitted (max_slots, k+1) i32, new SlotState) under the
+        same n_gen-delta protocol as ``decode_segment``: slot b's real
+        tokens are the first ``n_gen_after[b] − n_gen_before[b]`` entries
+        of ``emitted[b]``, the rest is ``pad_id``."""
+        params = _as_tree(params)
+        proposals = jnp.asarray(proposals, jnp.int32)
+        B, k = proposals.shape
+        W = k + 1
+        run = slots.run
+        p0 = slots.state.pos
+        tokens = jnp.concatenate([slots.tok, proposals], axis=1)   # (B, W)
+        logits, dstate = self.decode_verify(params, slots.state, tokens,
+                                            active=run)
+        t = greedy_tokens(logits)                                  # (B, W)
+        # a = longest accepted prefix: w_{j+1} must equal t_j
+        match = (proposals == t[:, :k]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)               # (B,) 0..k
+        idx = jnp.arange(W, dtype=jnp.int32)[None, :]
+        # candidate commit stream: accepted proposals then the bonus token
+        props_ext = jnp.concatenate(
+            [proposals, jnp.zeros((B, 1), jnp.int32)], axis=1)
+        cand_toks = jnp.where(idx < acc[:, None], props_ext, t)    # (B, W)
+        remaining = jnp.maximum(slots.budget - slots.n_gen, 1)     # run: >=1
+        cand = jnp.minimum(acc + 1, remaining)                     # (B,) >=1
+        if eos_id is not None:
+            is_eos = (cand_toks == eos_id) & (idx < cand[:, None])
+            eos_hit = is_eos.any(axis=1)
+            first_eos = jnp.argmax(is_eos, axis=1)                 # 0 if none
+            m = jnp.where(eos_hit, first_eos + 1, cand)
+        else:
+            eos_hit = jnp.zeros((B,), bool)
+            m = cand
+        m = jnp.where(run, m, 0)                                   # (B,)
+        emitted = jnp.where(run[:, None] & (idx < m[:, None]),
+                            cand_toks, pad_id)
+        last = jnp.take_along_axis(
+            cand_toks, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+        n_gen = slots.n_gen + m
+        done = slots.done | (run & (eos_hit | (n_gen >= slots.budget)))
+        return emitted, SlotState(
+            state=DecodeState(dstate.layers, p0 + m),   # structural rollback
+            tok=jnp.where(run, last, slots.tok[:, 0])[:, None],
+            active=slots.active,
+            done=done,
+            n_gen=n_gen,
+            budget=slots.budget)
 
     # --------------------------------------------------------- dry-run IO --
     def input_specs(self, shape: ShapeConfig) -> dict:

@@ -214,6 +214,55 @@ def group_decode(params, x, group: Group, cfg: ModelConfig, caches, pos,
     return x, new_caches
 
 
+def sub_verify(p, x, sub: Sub, cfg: ModelConfig, cache, pos, memory=None,
+               active=None):
+    """Width-W verify step (speculative decoding): x (B, W, D) is the
+    current token + draft proposals. Same contract as ``sub_decode`` but
+    every sublayer processes all W positions in one pass; attention writes
+    the W new KV rows and masks each query to its own causal horizon.
+    Recurrent mixers are structurally unrollable only forward — their state
+    cannot roll back on rejection — so they are a capability error at the
+    engine layer and a hard error here."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if sub.kind == "attn":
+        out, nc = attn.verify_attention(p, h, cfg, cache, pos,
+                                        window=sub.window, active=active)
+    elif sub.kind == "cross_attn":
+        out = attn.cross_decode(p, h, cfg, cache)
+        nc = cache
+    elif sub.kind == "mlp":
+        out, nc = mlp_apply(p, h, cfg.act), None
+    elif sub.kind == "moe":
+        out, _ = moe_lib.moe_apply(p, h, cfg)
+        nc = None
+    else:
+        raise ValueError(
+            f"verify step unsupported for recurrent sublayer {sub.kind!r}: "
+            f"SSM/RWKV state has no structural rollback")
+    return x + out, nc
+
+
+def group_verify(params, x, group: Group, cfg: ModelConfig, caches, pos,
+                 memory=None, active=None):
+    """Scan over layers at width W — the verify-mode twin of
+    ``group_decode`` (same xs/ys cache protocol)."""
+
+    def body(h, inp):
+        layer_params, layer_cache = inp
+        new_cache = {}
+        for i, s in enumerate(group.period):
+            key = f"sub{i}"
+            h, nc = sub_verify(layer_params[key], h, s, cfg,
+                               layer_cache.get(key), pos, memory=memory,
+                               active=active)
+            if key in layer_cache:
+                new_cache[key] = nc if nc is not None else layer_cache[key]
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches
+
+
 def group_init_cache(group: Group, cfg: ModelConfig, batch, cache_len, dtype,
                      memory_len: int = 0):
     """Zero caches stacked over repeats. Only caching subs get entries."""

@@ -253,6 +253,56 @@ class TestDoctoredArtifactsFail:
         assert any("queueing regressed" in x
                    for x in cr.check_serving(cur, base))
 
+    def test_serving_spec_parity_flip_fails(self):
+        """Flipping the speculative bit-parity flag is the tentpole claim
+        broken: greedy speculative no longer reproduces greedy decode."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["speculative"]["parity_with_continuous"] = False
+        cur["ok"]["spec_parity"] = False
+        v = cr.check_serving(cur, base)
+        assert any("bit-identical" in x for x in v), v
+
+    def test_serving_spec_fake_acceptance_fails(self):
+        """A doctored acceptance rate (zero / collapsed) must fail even if
+        the ok flag is left claiming success — the gate recomputes from
+        the artifact's own numbers."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["speculative"]["acceptance_rate"] = 0.0
+        assert any("not positive" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_spec_launch_economics_fails(self):
+        """Target per-slot forwards >= committed tokens means speculation
+        stopped saving decode launches."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["speculative"]["target_slot_forwards"] = \
+            cur["speculative"]["spec_tokens_committed"] + 1
+        cur["ok"]["spec_forwards_lt_tokens"] = False
+        assert any("not saving launches" in x
+                   for x in cr.check_serving(cur, base))
+
+    def test_serving_spec_extra_executables_fail(self):
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        cur["speculative"]["draft_traces"] = 4
+        cur["ok"]["spec_single_draft_trace"] = False
+        assert any("draft-propose" in x for x in cr.check_serving(cur, base))
+
+    def test_serving_spec_section_vanishing_fails(self):
+        """Silently dropping the speculative section must fail — the
+        contract would otherwise stop being exercised without a diff in
+        any gated number."""
+        base = _load("BENCH_serving.json")
+        cur = copy.deepcopy(base)
+        del cur["speculative"]
+        for k in list(cur["ok"]):
+            if k.startswith("spec_"):
+                del cur["ok"][k]
+        assert any("no longer being exercised" in x
+                   for x in cr.check_serving(cur, base))
+
     def test_missing_baseline_fails_cli(self, tmp_path):
         art = tmp_path / "BENCH_train_step.json"
         art.write_text(json.dumps(_load("BENCH_train_step.json")))

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config
-from repro.models.model import build_model
+from repro.models.model import build_model, greedy_tokens
 
 ALL_ARCHS = sorted(set(ARCHS) - {"gpt-tiny"})
 
@@ -148,11 +148,13 @@ def test_generate_greedy_equals_python_loop():
     assert np.array_equal(np.asarray(state.pos), np.full((B,), T + G - 1))
 
     logits, st = model.prefill(params, batch, cache_len=T + G)
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    # the reference loop uses the engine's own greedy contract (bf16-rounded
+    # argmax) — a raw fp32 argmax could flip on sub-ULP kernel-width noise
+    tok = greedy_tokens(logits[:, -1])[:, None]
     ref = [tok]
     for _ in range(G - 1):
         logits, st = model.decode_step(params, st, tok)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        tok = greedy_tokens(logits[:, -1])[:, None]
         ref.append(tok)
     np.testing.assert_array_equal(np.asarray(toks),
                                   np.asarray(jnp.concatenate(ref, axis=1)))

@@ -1,0 +1,436 @@
+"""Speculative decoding on the slot-pool seam + the unified serving API.
+
+Covers the PR-10 surfaces: greedy speculative bit-parity against
+non-speculative serving (dense and GQA + sliding-window attention archs),
+the k-boundary cases of ``spec_verify`` (accept-all, reject-all, mid-slot
+EOS inside an accepted prefix, budget truncation), the ``SamplingParams``
+deprecation shim (old-kwargs engine ≡ dataclass engine, trace counts
+unchanged), the ``Request``/``RequestResult``/``make_engine`` surface, the
+typed failure taxonomy (``AdmissionError``/``CapabilityError``/
+``PoolError`` stay catchable as their legacy bases), and SpecState
+sharding-spec routing.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.api import (AdmissionError, CapabilityError, PoolError,
+                              Request, RequestResult, SamplingParams,
+                              ServeError, make_engine)
+from repro.launch.serve import (ContinuousEngine, GenerationEngine,
+                                SlotPool, draft_from_target)
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def gpt():
+    cfg = get_config("gpt-tiny", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_config("gemma3-27b", smoke=True)   # GQA + sliding window
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trace(cfg, n, seed=3, lo=4, hi=12, gen_hi=10):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        L = int(rng.integers(lo, hi + 1))
+        reqs.append(Request(
+            tokens=rng.integers(2, cfg.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, gen_hi + 1)),
+            arrival=float(rng.uniform(0, 12))))
+    return reqs
+
+
+# --------------------------------------------- engine-level bit-parity --
+def _spec_parity(model, params, cfg, draft_spec, *, eos_id=None, n=9,
+                 gen=10, spec_k=4):
+    reqs = _trace(cfg, n, gen_hi=gen)
+    sp = SamplingParams(eos_id=eos_id)
+    cont = make_engine(model, params, mode="continuous", sampling=sp,
+                       cache_len=16 + gen, max_slots=3, seg_len=4,
+                       prefill_batch=2)
+    outs_c, rep_c = cont.serve(reqs, gen, key=jax.random.PRNGKey(5))
+    dm, dp = draft_from_target(model, params, draft_spec)
+    spec = make_engine(model, params, mode="speculative", sampling=sp,
+                       cache_len=16 + gen, max_slots=3, seg_len=4,
+                       prefill_batch=2, draft_model=dm, draft_params=dp,
+                       spec_k=spec_k)
+    outs_s, rep_s = spec.serve(reqs, gen, key=jax.random.PRNGKey(5))
+    for i, (a, b) in enumerate(zip(outs_c, outs_s)):
+        assert len(a) == len(b) and (a == b).all(), (
+            f"request {i}: speculative {b} != continuous {a}")
+    assert rep_s["tokens_real"] == rep_c["tokens_real"]
+    assert rep_s["draft_traces"] == 1, "draft-propose must be ONE program"
+    assert rep_s["verify_traces"] == 1, "verify must be ONE program"
+    assert rep_s["target_slot_forwards"] < rep_s["spec_tokens_committed"], (
+        "speculation must commit strictly more tokens than target per-slot "
+        "forwards")
+    assert rep_s["acceptance_rate"] > 0
+    return rep_s
+
+
+def test_spec_parity_dense_self_draft(gpt):
+    """Target-as-draft: every proposal accepted, output bit-identical."""
+    cfg, model, params = gpt
+    rep = _spec_parity(model, params, cfg, "self")
+    # with draft == target every surviving proposal matches; acceptance
+    # only drops below 1.0 through budget/EOS truncation of commits
+    assert rep["acceptance_rate"] > 0.5
+
+
+def test_spec_parity_dense_truncated_draft(gpt):
+    """layers:1 truncation (shared embed/head): parity must hold at ANY
+    acceptance rate — rejection replays the target's own greedy token."""
+    cfg, model, params = gpt
+    _spec_parity(model, params, cfg, "layers:1")
+
+
+def test_spec_parity_dense_with_eos(gpt):
+    """EOS retirement inside speculative commits stays bit-exact."""
+    cfg, model, params = gpt
+    probe = GenerationEngine(model, params, max_batch=3)
+    rows = probe.generate(_trace(cfg, 9, gen_hi=10), 10,
+                          key=jax.random.PRNGKey(5))
+    eos = next(int(t) for row in rows for t in row[1:] if int(t) != 0)
+    _spec_parity(model, params, cfg, "self", eos_id=eos)
+
+
+def test_spec_parity_gqa_sliding_window(gemma):
+    """GQA (2 kv heads / 4 q heads) + local:global sliding-window pattern
+    through the width-(k+1) verify path — bit parity with the plain
+    decode path, across window boundaries."""
+    cfg, model, params = gemma
+    assert cfg.n_kv_heads < cfg.n_heads and cfg.local_global_period
+    _spec_parity(model, params, cfg, "self", n=6, gen=8, spec_k=3)
+
+
+def test_spec_k_one(gpt):
+    """k=1 (minimum useful speculation) exercises the degenerate verify
+    width W=2."""
+    cfg, model, params = gpt
+    _spec_parity(model, params, cfg, "self", n=5, gen=6, spec_k=1)
+
+
+# -------------------------------------------- model-layer k boundaries --
+def _seed_slots(model, params, cfg, B, cache_len, budget, key=0):
+    """Two live slots prefilled from a fixed batch; returns (slots, batch,
+    greedy) where greedy[b] is the closed-batch greedy continuation
+    (greedy[:, 0] is the prefill-sampled token already in slots.tok)."""
+    toks = np.asarray(np.random.default_rng(key).integers(
+        2, cfg.vocab_size, size=(B, 8)), np.int32)
+    batch = {"tokens": jnp.asarray(toks)}
+    greedy, _ = model.generate(params, batch, budget, cache_len=cache_len)
+    slots = model.init_slot_state(B, cache_len)
+    _, slots = model.prefill_into(
+        params, slots, batch, jnp.arange(B, dtype=jnp.int32),
+        jnp.full((B,), budget, jnp.int32), jax.random.PRNGKey(0),
+        cache_len=cache_len)
+    assert (np.asarray(slots.tok[:, 0]) == np.asarray(greedy[:, 0])).all()
+    return slots, batch, np.asarray(greedy)
+
+
+def test_spec_verify_accept_all(gpt):
+    """Proposals that equal the target's greedy tokens commit k+1 tokens
+    (all k proposals + the bonus token) in ONE verify forward."""
+    cfg, model, params = gpt
+    k, budget = 3, 10
+    slots, _, greedy = _seed_slots(model, params, cfg, 2, 32, budget)
+    props = jnp.asarray(greedy[:, 1:k + 1])
+    emitted, ns = model.spec_verify(params, slots, props)
+    m = np.asarray(ns.n_gen) - np.asarray(slots.n_gen)
+    assert (m == k + 1).all(), f"accept-all must commit k+1, got {m}"
+    assert (np.asarray(emitted)[:, :k + 1] == greedy[:, 1:k + 2]).all()
+    assert (np.asarray(ns.state.pos)
+            == np.asarray(slots.state.pos) + k + 1).all()
+    assert (np.asarray(ns.tok[:, 0]) == greedy[:, k + 1]).all()
+    assert not np.asarray(ns.done).any()
+
+
+def test_spec_verify_reject_all(gpt):
+    """Proposals that are ALL wrong still commit exactly 1 correct token
+    (the bonus token = the target's own greedy choice) and roll pos back
+    to p0 + 1 — structurally identical to one non-speculative step."""
+    cfg, model, params = gpt
+    k, budget = 3, 10
+    slots, _, greedy = _seed_slots(model, params, cfg, 2, 32, budget)
+    wrong = (greedy[:, 1:k + 1].astype(np.int64) + 1) % cfg.vocab_size
+    emitted, ns = model.spec_verify(params, slots,
+                                    jnp.asarray(wrong, jnp.int32))
+    m = np.asarray(ns.n_gen) - np.asarray(slots.n_gen)
+    assert (m == 1).all(), f"reject-all must commit exactly 1, got {m}"
+    assert (np.asarray(emitted)[:, 0] == greedy[:, 1]).all()
+    assert (np.asarray(emitted)[:, 1:] == 0).all(), "pad after commit"
+    assert (np.asarray(ns.state.pos)
+            == np.asarray(slots.state.pos) + 1).all()
+    assert (np.asarray(ns.tok[:, 0]) == greedy[:, 1]).all()
+
+
+def test_spec_verify_rollback_then_readvance(gpt):
+    """The rejected suffix's KV rows must be dead: a reject-all verify
+    followed by more verifies reproduces the exact greedy stream (the
+    rolled-back rows are re-written, never attended)."""
+    cfg, model, params = gpt
+    k, budget = 3, 12
+    slots, _, greedy = _seed_slots(model, params, cfg, 2, 32, budget)
+    wrong = (greedy[:, 1:k + 1].astype(np.int64) + 1) % cfg.vocab_size
+    _, slots = model.spec_verify(params, slots,
+                                 jnp.asarray(wrong, jnp.int32))   # commits 1
+    props = jnp.asarray(greedy[:, 2:k + 2])           # now all correct
+    emitted, ns = model.spec_verify(params, slots, props)
+    m = np.asarray(ns.n_gen) - np.asarray(slots.n_gen)
+    assert (m == k + 1).all()
+    assert (np.asarray(emitted)[:, :k + 1] == greedy[:, 2:k + 3]).all(), (
+        "post-rollback commits diverged — stale KV rows leaked into "
+        "attention")
+
+
+def test_spec_verify_eos_in_accepted_prefix(gpt):
+    """An EOS inside the accepted prefix cuts the commit at the EOS (which
+    IS emitted) and marks the slot done, even though more proposals were
+    accepted."""
+    cfg, model, params = gpt
+    k, budget = 4, 10
+    slots, _, greedy = _seed_slots(model, params, cfg, 2, 32, budget)
+    eos = int(greedy[0, 2])            # 2nd committed token of slot 0
+    assert eos != 0
+    props = jnp.asarray(greedy[:, 1:k + 1])
+    emitted, ns = model.spec_verify(params, slots, props, eos_id=eos)
+    m = np.asarray(ns.n_gen) - np.asarray(slots.n_gen)
+    em = np.asarray(emitted)
+    assert m[0] == 2, f"slot 0 must cut at the EOS, committed {m[0]}"
+    assert em[0, 1] == eos and (em[0, 2:] == 0).all()
+    assert np.asarray(ns.done)[0]
+    # slot 1 is governed by its own stream: done iff its commit hit eos
+    row1 = em[1, :m[1]]
+    assert bool(np.asarray(ns.done)[1]) == bool((row1 == eos).any())
+
+
+def test_spec_verify_budget_truncation(gpt):
+    """remaining-budget cap: a slot with 2 tokens of budget left commits at
+    most 2 even when all k proposals are accepted, and retires."""
+    cfg, model, params = gpt
+    k, budget = 4, 3                   # prefill consumed 1 → 2 remaining
+    slots, _, greedy = _seed_slots(model, params, cfg, 2, 32, budget)
+    props = jnp.asarray(greedy[:, 1:k + 1])
+    emitted, ns = model.spec_verify(params, slots, props)
+    m = np.asarray(ns.n_gen) - np.asarray(slots.n_gen)
+    assert (m == 2).all()
+    assert (np.asarray(emitted)[:, :2] == greedy[:, 1:3]).all()
+    assert np.asarray(ns.done).all()
+    assert (np.asarray(ns.n_gen) == budget).all()
+
+
+# -------------------------------------------------- capability taxonomy --
+def test_spec_recurrent_capability_error():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(CapabilityError):
+        ContinuousEngine(model, params, cache_len=32, draft_model=model,
+                         draft_params=params, spec_k=4)
+    with pytest.raises(RuntimeError):      # legacy-base compatibility
+        ContinuousEngine(model, params, cache_len=32, draft_model=model,
+                         draft_params=params, spec_k=4)
+
+
+def test_spec_greedy_only(gpt):
+    cfg, model, params = gpt
+    with pytest.raises(CapabilityError):
+        make_engine(model, params, mode="speculative",
+                    sampling=SamplingParams(temperature=0.7),
+                    cache_len=32, draft_model=model, draft_params=params,
+                    spec_k=4)
+
+
+def test_spec_admission_errors(gpt):
+    cfg, model, params = gpt
+    with pytest.raises(AdmissionError):    # no draft supplied
+        make_engine(model, params, mode="speculative", cache_len=32)
+    with pytest.raises(AdmissionError):    # spec_k must be positive
+        make_engine(model, params, mode="speculative", cache_len=32,
+                    draft_model=model, draft_params=params, spec_k=0)
+    with pytest.raises(AdmissionError):
+        make_engine(model, params, mode="warp-drive", cache_len=32)
+    with pytest.raises(AdmissionError):
+        draft_from_target(model, params, "layers:99")
+
+
+def test_error_taxonomy_bases():
+    """Typed exceptions stay catchable as their pre-taxonomy bases — the
+    untouched legacy tests (pytest.raises(ValueError/RuntimeError)) are
+    the proof this shim works; this pins the hierarchy explicitly."""
+    assert issubclass(AdmissionError, ValueError)
+    assert issubclass(AdmissionError, ServeError)
+    assert issubclass(CapabilityError, RuntimeError)
+    assert issubclass(PoolError, RuntimeError)
+    with pytest.raises(ValueError):
+        SlotPool(0)
+    pool = SlotPool(1)
+    pool.alloc()
+    with pytest.raises(PoolError):
+        pool.alloc()
+
+
+# --------------------------------------------------- SamplingParams API --
+def test_sampling_params_validation():
+    with pytest.raises(AdmissionError):
+        SamplingParams(eos_id=0, pad_id=0)
+    with pytest.raises(AdmissionError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(AdmissionError):
+        SamplingParams(top_k=-1)
+    sp = SamplingParams(eos_id=1, temperature=0.5, top_k=3, seed=7)
+    assert (sp.eos_id, sp.temperature, sp.top_k, sp.seed) == (1, 0.5, 3, 7)
+
+
+def test_sampling_shim_equivalence_closed(gpt):
+    """Legacy loose kwargs ≡ dataclass: identical outputs AND identical
+    trace counts (the shim must not change what gets compiled), with a
+    DeprecationWarning on the legacy path only."""
+    cfg, model, params = gpt
+    reqs = _trace(cfg, 5, gen_hi=6)
+    with pytest.warns(DeprecationWarning):
+        legacy = GenerationEngine(model, params, max_batch=2,
+                                  temperature=0.8, top_k=5, eos_id=1,
+                                  seed=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # dataclass path must NOT warn
+        new = GenerationEngine(
+            model, params, max_batch=2,
+            sampling=SamplingParams(temperature=0.8, top_k=5, eos_id=1,
+                                    seed=3))
+    outs_l = legacy.generate(reqs, 6, key=jax.random.PRNGKey(2))
+    outs_n = new.generate(reqs, 6, key=jax.random.PRNGKey(2))
+    for a, b in zip(outs_l, outs_n):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert legacy.stats["traces"] == new.stats["traces"]
+    assert legacy.sampling == new.sampling
+
+
+def test_sampling_shim_equivalence_continuous(gpt):
+    cfg, model, params = gpt
+    reqs = _trace(cfg, 6, gen_hi=8)
+    with pytest.warns(DeprecationWarning):
+        legacy = ContinuousEngine(model, params, cache_len=24, max_slots=2,
+                                  seg_len=4, eos_id=1)
+    new = ContinuousEngine(model, params, cache_len=24, max_slots=2,
+                           seg_len=4, sampling=SamplingParams(eos_id=1))
+    outs_l, rep_l = legacy.serve(reqs, 8, key=jax.random.PRNGKey(4))
+    outs_n, rep_n = new.serve(reqs, 8, key=jax.random.PRNGKey(4))
+    for a, b in zip(outs_l, outs_n):
+        assert len(a) == len(b) and (a == b).all()
+    assert rep_l["prefill_traces"] == rep_n["prefill_traces"]
+    assert rep_l["decode_traces"] == rep_n["decode_traces"]
+
+
+def test_sampling_both_paths_is_error(gpt):
+    cfg, model, params = gpt
+    with pytest.raises(AdmissionError):
+        GenerationEngine(model, params, sampling=SamplingParams(),
+                         temperature=0.5)
+
+
+def test_model_generate_takes_sampling(gpt):
+    """Model.generate consumes SamplingParams (duck-typed) and the result
+    is bit-identical to the loose-kwarg spelling."""
+    cfg, model, params = gpt
+    batch = {"tokens": jnp.asarray(np.random.default_rng(2).integers(
+        2, cfg.vocab_size, size=(2, 6)), jnp.int32)}
+    a, _ = model.generate(params, batch, 8, eos_id=1, pad_id=0)
+    b, _ = model.generate(params, batch, 8,
+                          sampling=SamplingParams(eos_id=1))
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ------------------------------------------- Request/RequestResult/run --
+def test_make_engine_modes(gpt):
+    cfg, model, params = gpt
+    assert isinstance(make_engine(model, params), GenerationEngine)
+    cont = make_engine(model, params, mode="continuous", cache_len=32)
+    assert isinstance(cont, ContinuousEngine) and cont.spec_k == 0
+    spec = make_engine(model, params, mode="speculative", cache_len=32,
+                       draft_model=model, draft_params=params)
+    assert isinstance(spec, ContinuousEngine) and spec.spec_k == 4
+
+
+def test_run_unified_results(gpt):
+    """Both engines return the same RequestResult surface from run():
+    finish_reason from the taxonomy, real token streams, queueing delay
+    (0 for closed), and an inadmissible request surfaces as
+    finish_reason='error' WITHOUT failing the rest of the trace."""
+    cfg, model, params = gpt
+    G = 8
+    reqs = _trace(cfg, 5, gen_hi=G)
+    bad = Request(tokens=np.arange(2, 200, dtype=np.int32))  # can't fit
+    closed = make_engine(model, params, max_batch=2)
+    res_c, rep_c = closed.run(reqs, G, key=jax.random.PRNGKey(1))
+    cont = make_engine(model, params, mode="continuous", cache_len=16 + G,
+                       max_slots=2, seg_len=4)
+    res_o, rep_o = cont.run(reqs + [bad], G, key=jax.random.PRNGKey(1))
+    assert rep_c["mode"] == "closed"
+    for rc, ro, r in zip(res_c, res_o, reqs):
+        assert isinstance(rc, RequestResult)
+        assert rc.finish_reason == "budget" and ro.finish_reason == "budget"
+        assert rc.n_generated == ro.n_generated == min(r.max_new_tokens, G)
+        assert (rc.tokens == ro.tokens).all()
+        assert rc.delay_ticks == 0.0 and ro.delay_ticks >= 0.0
+    err = res_o[-1]
+    assert err.finish_reason == "error" and err.n_generated == 0
+    assert "cache_len" in err.error
+
+
+def test_run_eos_finish_reason(gpt):
+    cfg, model, params = gpt
+    G = 10
+    reqs = _trace(cfg, 6, seed=7, gen_hi=G)
+    probe = GenerationEngine(model, params, max_batch=2)
+    rows = probe.generate(reqs, G, key=jax.random.PRNGKey(9))
+    eos = next(int(t) for row in rows for t in row[1:] if int(t) != 0)
+    cont = make_engine(model, params, mode="continuous", cache_len=16 + G,
+                       max_slots=2, seg_len=4,
+                       sampling=SamplingParams(eos_id=eos))
+    res, _ = cont.run(reqs, G, key=jax.random.PRNGKey(9))
+    reasons = {r.finish_reason for r in res}
+    assert "eos" in reasons and reasons <= {"eos", "budget"}
+    for r in res:
+        if r.finish_reason == "eos":
+            assert r.tokens[-1] == eos
+        else:
+            assert eos not in r.tokens.tolist()
+
+
+def test_request_result_validates_reason():
+    with pytest.raises(AssertionError):
+        RequestResult(np.zeros(0, np.int32), 0, "vibes")
+
+
+# ----------------------------------------------------- sharding routing --
+def test_spec_state_shardings(gpt):
+    """cache_shardings routes BOTH halves of SpecState by leaf attribute
+    name: the draft pool's pos/k/v leaves get the same layouts as the
+    target's (the pools co-shard over the slot batch dim)."""
+    from repro.distributed import sharding as shard_lib
+    cfg, model, params = gpt
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec_abs = jax.eval_shape(
+        lambda: model.init_spec_state(model, 4, 32))
+    sh = shard_lib.cache_shardings(spec_abs, mesh)
+    pos_spec = sh.slots.state.pos.spec
+    assert sh.draft.pos.spec == pos_spec
+    assert sh.slots.active.spec == pos_spec
+    t_kv = jax.tree_util.tree_leaves(sh.slots.state.layers)
+    d_kv = jax.tree_util.tree_leaves(sh.draft.layers)
+    assert {s.spec for s in d_kv} <= {s.spec for s in t_kv}
